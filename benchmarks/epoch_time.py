@@ -1,0 +1,129 @@
+"""Table 2 reproduction — per-epoch training time, ours vs the naive
+(HP-GNN-style) dataflow.
+
+The FPGA cannot be timed here, so the reproduction has two layers:
+
+  1. **Analytic model at the paper's scale**: per-epoch op counts from the
+     Table-1 cost model at the paper's setup (batch 1024, NS (25, 10),
+     hidden 256), for the naive dataflow vs ours.  The paper's headline is
+     1.03×–1.81× over HP-GNN; our model isolates the DATAFLOW component of
+     that gap (the NoC/NUMA component shows up in the ctc benchmark).
+  2. **Measured at reduced scale**: wall-clock s/epoch of the actual jitted
+     training step on the synthetic datasets, ours vs naive, same seeds.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import LayerShape, time_naive, time_ours
+from repro.graph import NeighborSampler, make_dataset
+from repro.graph.datasets import DATASET_STATS
+from repro.models.gcn_model import GCNConfig, gcn_loss, init_gcn_params
+from repro.optim import apply_updates, sgd
+
+from .dataflow_table1 import BATCH, FANOUTS, HIDDEN, paper_layer_shapes
+
+
+def _time_naive_realistic(s: LayerShape, order: str) -> float:
+    """Implementation-realistic baseline transpose costs: the Aᵀ table is an
+    O(e log e) COO re-sort (not Table 1's literal O(n̄e) bound) and the
+    feature transpose an O(n̄d) copy — what a software HP-GNN-style port
+    would actually pay.  Keeps the Table-2 comparison honest."""
+    import math
+    base = time_ours(s, order) - (s.h * s.d + s.b * s.c)
+    resort = s.e * max(math.log2(max(s.e, 2)), 1.0)
+    feat_t = (s.nbar if order == "coag" else s.n) * s.d
+    return float(base + resort + feat_t + s.h * s.d)
+
+
+def analytic_epoch_ratio() -> List[Dict]:
+    rows = []
+    for name, st in DATASET_STATS.items():
+        shapes = paper_layer_shapes(name)
+        batches = st.n_nodes // BATCH
+        naive_lit = sum(min(time_naive(s, "coag"), time_naive(s, "agco"))
+                        for s in shapes) * batches
+        naive_real = sum(min(_time_naive_realistic(s, "coag"),
+                             _time_naive_realistic(s, "agco"))
+                         for s in shapes) * batches
+        ours = sum(min(time_ours(s, "coag"), time_ours(s, "agco"))
+                   for s in shapes) * batches
+        rows.append({"dataset": name, "ops_naive": naive_lit,
+                     "ops_naive_realistic": naive_real, "ops_ours": ours,
+                     "speedup_paper_literal": naive_lit / ours,
+                     "speedup": naive_real / ours})
+    return rows
+
+
+def measured_epoch(name: str, scale: float = 0.01, batch: int = 64,
+                   n_batches: int = 8, seed: int = 0) -> Dict:
+    ds = make_dataset(name, scale=scale, feat_dim=64)
+    sampler = NeighborSampler(ds.graph, fanouts=FANOUTS, pad_multiple=16,
+                              seed=seed)
+    out = {}
+    rng = np.random.default_rng(seed)
+    seeds_list = [rng.permutation(ds.graph.n_nodes)[:batch]
+                  for _ in range(n_batches)]
+    nnz_pad = sampler.static_nnz(batch)
+    batches = []
+    for sd in seeds_list:
+        mb = sampler.sample(sd, nnz_pad=nnz_pad,
+                            rng=np.random.default_rng(0))
+        x = jnp.asarray(ds.features[np.minimum(mb.input_nodes,
+                                               ds.graph.n_nodes - 1)])
+        pad = mb.layers[0].n_dst - len(sd)
+        lab = ds.labels[np.pad(sd, (0, pad))]
+        if lab.ndim > 1:
+            lab = lab.argmax(-1).astype(np.int32)
+        batches.append((mb.layers, x, jnp.asarray(lab)))
+    for dataflow in ("ours", "naive"):
+        cfg = GCNConfig(name=name, feat_dim=64, hidden=HIDDEN,
+                        n_classes=ds.stats.n_classes, dataflow=dataflow)
+        params = init_gcn_params(jax.random.PRNGKey(seed), cfg)
+        init, update = sgd(0.05)
+        opt = init(params)
+        orders = ("agco", "agco")
+
+        @jax.jit
+        def step(params, opt, layers, x, lab):
+            loss, g = jax.value_and_grad(gcn_loss)(params, layers, x, lab,
+                                                   cfg, orders,
+                                                   n_valid=batch)
+            upd, opt = update(g, opt, params)
+            return apply_updates(params, upd), opt, loss
+
+        # warmup compile
+        params, opt, _ = step(params, opt, *batches[0])
+        t0 = time.perf_counter()
+        for layers, x, lab in batches:
+            params, opt, loss = step(params, opt, layers, x, lab)
+        jax.block_until_ready(loss)
+        out[dataflow] = (time.perf_counter() - t0) / n_batches
+    out["speedup"] = out["naive"] / out["ours"]
+    return out
+
+
+def main() -> None:
+    print("## analytic (paper scale, dataflow component of Table 2)")
+    print("dataset,ops_naive_tab1,ops_naive_realistic,ops_ours,"
+          "speedup_tab1,speedup_realistic")
+    for r in analytic_epoch_ratio():
+        print(f"{r['dataset']},{r['ops_naive']:.4g},"
+              f"{r['ops_naive_realistic']:.4g},{r['ops_ours']:.4g},"
+              f"{r['speedup_paper_literal']:.2f},{r['speedup']:.3f}")
+    print("# paper Table 2 overall speedup vs HP-GNN: 1.03x-1.81x "
+          "(dataflow + NoC components combined)")
+    print("## measured (reduced scale, s/batch on CPU)")
+    print("dataset,s_naive,s_ours,speedup")
+    for name in ("flickr", "reddit"):
+        m = measured_epoch(name)
+        print(f"{name},{m['naive']:.4f},{m['ours']:.4f},{m['speedup']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""§Roofline table — read the dry-run records and emit the three-term
+analysis per (arch × shape × mesh): seconds per term, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and a one-line lever.
+
+    PYTHONPATH=src python -m benchmarks.roofline [records.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "dryrun_records.json")
+
+LEVERS = {
+    "compute": "raise arithmetic intensity: fuse epilogues, bf16 logits, "
+               "larger per-device batch",
+    "memory": "cut HBM traffic: fuse softmax/CE, bf16 intermediates, "
+              "remat policy tuning, flash-block sizing",
+    "collective": "cut wire bytes: bf16 collectives, 2D all-reduce, "
+                  "pre-reduction before exchange (paper's Block-Message "
+                  "merge), overlap with compute",
+}
+
+
+def load(path: str = DEFAULT) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in records:
+        if r.get("skipped") or r.get("mesh") != mesh:
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_ms": t["t_compute"] * 1e3,
+            "t_memory_ms": t["t_memory"] * 1e3,
+            "t_collective_ms": t["t_collective"] * 1e3,
+            "dominant": t["dominant"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": t["t_compute"] / max(
+                t["t_compute"], t["t_memory"], t["t_collective"]),
+        })
+    return rows
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT
+    records = load(path)
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(records, mesh)
+        if not rows:
+            continue
+        print(f"## mesh {mesh}")
+        print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,"
+              "dominant,useful_flops_ratio,roofline_frac")
+        for r in sorted(rows, key=lambda r: r["roofline_frac"]):
+            print(f"{r['arch']},{r['shape']},{r['t_compute_ms']:.2f},"
+                  f"{r['t_memory_ms']:.2f},{r['t_collective_ms']:.2f},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},"
+                  f"{r['roofline_frac']:.3f}")
+        doms = {}
+        for r in rows:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"# dominant-term census: {doms}")
+        for k, v in LEVERS.items():
+            if doms.get(k):
+                print(f"# {k}-bound lever: {v}")
+
+
+if __name__ == "__main__":
+    main()

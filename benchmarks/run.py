@@ -1,0 +1,37 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    sections = [
+        ("Fig. 9 — routing cycles + §5.2 bandwidth", "routing_cycles"),
+        ("Table 1 — dataflow complexities (Eqs. 5-8) + measured contracts",
+         "dataflow_table1"),
+        ("Table 2 — epoch time, ours vs naive dataflow", "epoch_time"),
+        ("Fig. 1 — access locality / NUMA-vs-UMA bytes", "hbm_access"),
+        ("Fig. 10/11 — compute:comm ratio + utilization", "ctc_ratio"),
+        ("§Roofline — dry-run three-term table", "roofline"),
+        ("Scaling — per-device wire bytes vs core count", "scaling"),
+    ]
+    for title, mod in sections:
+        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+            m.main()
+            print(f"[{mod}: {time.time() - t0:.1f}s]")
+        except FileNotFoundError as e:
+            print(f"[{mod}: skipped — {e}; run the dry-run first]")
+        except Exception as e:  # noqa: BLE001
+            print(f"[{mod}: FAILED — {e!r}]")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""The paper's architecture end-to-end, distributed: 16 virtual devices play
+the 16 cores — local combination GEMMs, hypercube message-passing
+aggregation with sender-side pre-reduction, transpose-free backward, and
+Weight-Bank gradient sync.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=16 \
+        PYTHONPATH=src python examples/distributed_gcn.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=16")
+
+import jax                      # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.distributed.gcn_train import (init_params, make_train_step,  # noqa: E402
+                                         shard_minibatch)
+from repro.graph import NeighborSampler, make_dataset  # noqa: E402
+
+
+def main() -> None:
+    ds = make_dataset("reddit", scale=0.005, feat_dim=64)
+    sampler = NeighborSampler(ds.graph, fanouts=(5, 10), pad_multiple=16,
+                              seed=0)
+    mesh = jax.make_mesh((16,), ("model",))
+    print(f"mesh: {dict(mesh.shape)} — each device is one of the paper's "
+          f"16 hypercube cores")
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0),
+                         [(64, 64), (64, ds.stats.n_classes)])
+    step = None
+    with jax.set_mesh(mesh):
+        for i in range(20):
+            seeds = rng.permutation(ds.graph.n_nodes)[:64]
+            mb = sampler.sample(seeds, nnz_pad=sampler.static_nnz(64),
+                                rng=np.random.default_rng(i))
+            feats = ds.features[np.minimum(mb.input_nodes,
+                                           ds.graph.n_nodes - 1)]
+            pad = mb.layers[0].n_dst - len(seeds)
+            labels = ds.labels[np.pad(seeds, (0, pad))]
+            batch = shard_minibatch(mb, feats, labels, 16)
+            if step is None:
+                step = make_train_step(mesh, batch["dims"], lr=0.1)
+            params, loss = step(params, batch)
+            if i % 5 == 0:
+                print(f"step {i:3d}  loss {float(loss):.4f}")
+    print("done — combination stayed core-local, aggregation rode the "
+          "hypercube, weights synced via the Weight Bank psum")
+
+
+if __name__ == "__main__":
+    main()

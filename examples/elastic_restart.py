@@ -1,0 +1,32 @@
+"""Fault-tolerance walkthrough: train, lose a worker, checkpoint, shrink the
+mesh plan, resume from the checkpoint — the full recovery path in one file.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import tempfile
+
+from repro.checkpoint import CheckpointManager, scale_plan
+from repro.launch.train import train_lm
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as ckpt:
+        print("== phase 1: train with a worker dying at step 5 ==")
+        out = train_lm("llama3.2-1b", smoke=True, steps=10, batch=2, seq=32,
+                       ckpt_dir=ckpt, fault_at=5, log_every=2)
+        print(f"survivors: {out['survivors']} (worker 3 evicted)")
+
+        plan = scale_plan(n_available=255, model_parallel=16)
+        print(f"survivor mesh plan: {plan.mesh_shape} "
+              f"({plan.n_devices} devices)")
+
+        print("== phase 2: resume from the crash checkpoint ==")
+        mgr = CheckpointManager(ckpt)
+        print(f"resuming from step {mgr.latest_step()}")
+        out2 = train_lm("llama3.2-1b", smoke=True, steps=14, batch=2, seq=32,
+                        ckpt_dir=ckpt, resume=True, log_every=2)
+        print(f"final loss {out2['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

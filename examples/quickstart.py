@@ -1,0 +1,30 @@
+"""Quickstart — train the paper's 2-layer GCN on a synthetic Flickr-like
+graph with the transpose-free dataflow, the sequence estimator choosing the
+execution order, and checkpointing enabled.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+from repro.launch.train import train_gcn
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = train_gcn(
+            "flickr",                # synthetic stand-in (paper §5.1 stats)
+            model="gcn",             # or "sage"
+            dataflow="ours",         # the paper's Table-1 redesign
+            scale=0.01,              # shrink for CPU
+            batch_size=64,
+            steps=100,
+            lr=0.05,
+            ckpt_dir=ckpt,
+        )
+    print(f"\nestimator chose per-layer orders: {out['orders']}")
+    print(f"loss: {out['loss_history'][0]:.4f} -> "
+          f"{out['loss_history'][-1]:.4f} in {out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""The paper's core: route message waves over the 4-D hypercube with
+Algorithm 1 and compare against the static dimension-ordered schedule.
+
+    PYTHONPATH=src python examples/routing_playground.py
+"""
+import numpy as np
+
+from repro.core.routing import (make_fuse_wave, route_messages,
+                                validate_routing)
+from repro.core.schedule import compare_schedules
+from repro.core.blockmsg import build_waves, wave_statistics
+from repro.graph.coo import from_edges
+from repro.graph.partition import block_partition
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # --- a Fuse4 wave: 64 messages, 4 per source core -----------------
+    src, dst = make_fuse_wave(4, rng)
+    res = route_messages(src, dst, seed=1)
+    validate_routing(res, src, dst)
+    print(f"Fuse4 wave: {len(src)} messages in {res.cycles} cycles "
+          f"(lower bound 4)")
+    print("cycle-by-cycle positions of message 0:",
+          list(res.positions[:, 0]))
+    print(compare_schedules(src, dst, seed=1))
+
+    # --- Block Messages from a real subgraph ---------------------------
+    n = 1024
+    e = 8000
+    coo = from_edges(rng.integers(0, n, e), rng.integers(0, n, e),
+                     rng.standard_normal(e).astype(np.float32), n, n)
+    waves = build_waves(block_partition(coo, 16))
+    stats = wave_statistics(waves)
+    print(f"\n{int(stats['raw_edges'])} edges compressed into "
+          f"{int(stats['wire_messages'])} block messages "
+          f"({stats['compression']:.2f}x, the paper's Reduced-Register-File "
+          f"merge) across {int(stats['waves'])} waves")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serve a smoke-scale llama3.2-1b with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+
+from repro.launch.serve import Request, Server
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    srv = Server("llama3.2-1b", slots=4, max_seq=96)
+    for i in range(8):
+        prompt = rng.integers(0, srv.cfg.vocab,
+                              rng.integers(4, 10)).astype(np.int32)
+        srv.submit(Request(rid=i, prompt=prompt, max_new=12))
+    stats = srv.run()
+    print(f"served {len(srv.completed)} requests / {stats['tokens']} tokens "
+          f"in {stats['steps']} steps ({stats['tok_per_s']:.1f} tok/s)")
+    for r in srv.completed[:3]:
+        print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Elastic scaling — reshard a running job onto a different mesh.
+
+Checkpoints store GLOBAL host arrays (manager.py), so elasticity reduces to
+"restore with the new mesh's shardings".  This module supplies the two
+pieces around that:
+
+  * :func:`reshard` — live pytree → new mesh (no disk round-trip): gather to
+    host, device_put with the target shardings.  Used when the job keeps
+    running but the healthy-device set changed.
+  * :func:`scale_plan` — given (old_devices, new_devices) pick the largest
+    valid production-shaped mesh and report the batch/step re-scaling the
+    trainer applies (global batch is preserved by rebalancing per-device
+    batch — straggler-removal shrinks the mesh, recovery grows it back).
+
+The launcher's failure path (launch/train.py + checkpoint/health.py) is:
+detect → checkpoint (or reuse last) → build survivor mesh → restore with new
+shardings → continue.  tests/test_elastic.py runs the full loop on subsets
+of the 16 host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def gather_global(tree: Any) -> Any:
+    """Device pytree → host numpy pytree (global arrays)."""
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Place a (host or device) pytree onto new shardings leaf-by-leaf."""
+    host = gather_global(tree)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, s), host, shardings)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalePlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    per_device_batch_scale: float   # multiply per-device batch by this
+
+
+def scale_plan(n_available: int, *, model_parallel: int = 16,
+               global_batch: int = 256) -> ScalePlan:
+    """Largest (data, model) mesh with the fixed model-parallel degree.
+
+    The paper's 16-core hypercube (and our TP/EP degree) is a property of
+    the MODEL layout, so elasticity trades only the data axis: lose a node
+    → drop one data replica, keep global batch by scaling per-device batch.
+    """
+    if n_available < model_parallel:
+        # degrade model parallelism by powers of two (hypercube needs 2^k)
+        mp = 1 << int(np.log2(max(n_available, 1)))
+        data = 1
+    else:
+        mp = model_parallel
+        data = n_available // model_parallel
+    new_world = data * mp
+    old_data = max(global_batch // max(global_batch // max(data, 1), 1), 1)
+    return ScalePlan(
+        mesh_shape=(data, mp), axis_names=("data", "model"),
+        n_devices=new_world,
+        per_device_batch_scale=global_batch / (data * (global_batch // max(data, 1))) if data else 1.0,
+    )
+
+
+def make_mesh_from_plan(plan: ScalePlan,
+                        devices: Optional[Sequence] = None) -> Mesh:
+    devs = list(devices if devices is not None else jax.devices())
+    devs = devs[:plan.n_devices]
+    arr = np.array(devs).reshape(plan.mesh_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def shardings_like(tree: Any, mesh: Mesh, spec_fn) -> Any:
+    """Build a shardings pytree: ``spec_fn(path_free_leaf) -> PartitionSpec``
+    (most callers use a constant replicated spec for params and let pjit
+    re-shard activations)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, spec_fn(leaf)), tree)

@@ -1,0 +1,12 @@
+"""yi-6b [dense] — llama-arch GQA: 32L d_model=4096 32H (GQA kv=4)
+d_ff=11008 vocab=64000 (arXiv:2403.04652)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4, d_ff=11008,
+    vocab=64000, head_dim=128, rope_theta=5_000_000.0,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=512, head_dim=16)

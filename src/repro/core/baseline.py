@@ -1,0 +1,92 @@
+"""Naive training dataflow — the comparison baseline (Table 1 rows CoAg/AgCo).
+
+This is the dataflow the paper improves on (and what a mechanical port of an
+inference accelerator does for training): during the forward pass it
+*precomputes and stores the transposed operands* that backward will need —
+``Xᵀ`` (CoAg) or ``(AX)ᵀ`` (AgCo) — and it materializes an ``Aᵀ`` edge table
+for backward aggregation.  Costs relative to "Ours" (paper Eqs. 5–8):
+
+    time:    + O(n̄(e+d))   (CoAg)   /  + O(n̄e + nd)   (AgCo)
+    storage: + O(e) + O(n̄d)         — one extra edge table + one transposed
+                                       feature matrix resident in HBM
+
+Functionally it computes identical gradients (tests assert allclose vs
+:mod:`repro.core.gcn`), so the delta in residual bytes / HLO transposes /
+edge tables is attributable purely to the dataflow redesign.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.coo import COO
+from .gcn import _int_zero_ct, _spmm
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def gcn_layer_naive(n_dst: int, n_src: int, order: str, activate: bool,
+                    rows, cols, vals, x, w):
+    if order == "coag":
+        z = _spmm(rows, cols, vals, x @ w, n_dst)
+    else:
+        z = _spmm(rows, cols, vals, x, n_dst) @ w
+    return jnp.maximum(z, 0.0) if activate else z
+
+
+def _fwd(n_dst, n_src, order, activate, rows, cols, vals, x, w):
+    if order == "coag":
+        z = _spmm(rows, cols, vals, x @ w, n_dst)
+        feat_t = x.T                       # Table 1 CoAg: store Xᵀ  (O(n̄d))
+    else:
+        ax = _spmm(rows, cols, vals, x, n_dst)
+        z = ax @ w
+        feat_t = ax.T                      # Table 1 AgCo: store (AX)ᵀ (O(nd))
+    # the FPGA baseline WRITES these to HBM during forward; stop XLA from
+    # optimizing the materialization away, or the baseline wouldn't pay
+    # its own costs (the transpose-copy + the second edge table)
+    feat_t, t_rows, t_cols, t_vals = jax.lax.optimization_barrier(
+        (feat_t, cols + 0, rows + 0, vals + 0.0))
+    y = jnp.maximum(z, 0.0) if activate else z
+    mask = (z > 0) if activate else None
+    return y, (t_rows, t_cols, t_vals, feat_t, w, mask)
+
+
+def _bwd(n_dst, n_src, order, activate, res, ct):
+    t_rows, t_cols, t_vals, feat_t, w, mask = res
+    dz = jnp.where(mask, ct, 0.0) if activate else ct
+    wt = w.T + 0.0                          # materialized Wᵀ
+    if order == "coag":
+        s = _spmm(t_rows, t_cols, t_vals, dz, n_src)   # Aᵀ dz via Aᵀ table
+        dx = s @ wt
+        dw = feat_t @ s                                 # Xᵀ · S
+    else:
+        dw = feat_t @ dz                                # (AX)ᵀ · dz
+        dax = dz @ wt
+        dx = _spmm(t_rows, t_cols, t_vals, dax, n_src)
+    return (_int_zero_ct(t_rows), _int_zero_ct(t_cols), jnp.zeros_like(t_vals),
+            dx, dw)
+
+
+gcn_layer_naive.defvjp(_fwd, _bwd)
+
+
+def gcn_layer_baseline(A: COO, x, w, *, order: str = "coag",
+                       activate: bool = True):
+    """Public baseline layer (naive transposed-residual dataflow)."""
+    return gcn_layer_naive(A.n_dst, A.n_src, order, activate,
+                           A.rows, A.cols, A.vals, x, w)
+
+
+def residual_bytes_naive(order: str, n_dst: int, n_src: int, d: int, h: int,
+                         nnz: int, dtype_bytes: int = 4) -> int:
+    """Residual bytes of the naive dataflow: transposed feature copy + extra
+    Aᵀ edge table (2 int32 + 1 f32 per edge) + Wᵀ copy + mask."""
+    feat_t = (n_src * d if order == "coag" else n_dst * d) * dtype_bytes
+    edge_table = nnz * (4 + 4 + 4)
+    w_t = d * h * dtype_bytes
+    mask_bits = n_dst * h
+    return feat_t + edge_table + w_t + mask_bits // 8

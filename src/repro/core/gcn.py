@@ -1,0 +1,128 @@
+"""GCN layer with the paper's transpose-free backward dataflow (Table 1, "Ours").
+
+Forward (order selectable per layer by the sequence estimator, §4.4):
+    CoAg:  Y = σ( A (X W) )          — combine first
+    AgCo:  Y = σ( (A X) W )          — aggregate first
+
+Backward — the paper's redesign (Table 1 rows "Ours CoAg" / "Ours AgCo"):
+  * never materialize Aᵀ: backward aggregation walks the SAME edge list
+    column-major (Graph Converter; here :meth:`COO.rmatmul`),
+  * never materialize Xᵀ / (AX)ᵀ as residuals: the weight gradient contracts
+    X (resp. AX) directly over the node dimension
+    (``einsum('nd,nh->dh')`` = dot_general with contraction on dim 0 — XLA
+    never writes a transposed copy to HBM),
+  * never materialize Wᵀ: the error propagation contracts W over the hidden
+    dimension (``einsum('nh,dh->nd')``),
+  * the only true transpose left in the whole training step is the loss-layer
+    error (O(b·c), done once in the model's loss, not here).
+
+The measurable contracts (tests + benchmarks assert these):
+  * residual storage: CoAg saves {X, mask}, AgCo saves {AX, mask} — no
+    transposed duplicates (baseline.py saves Xᵀ/(AX)ᵀ like a naive port),
+  * edge storage: one COO table, reused by fwd and bwd (baseline builds Aᵀ),
+  * HLO of the backward contains no transpose of an [n, d]-sized operand.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.coo import COO
+
+Order = str  # 'coag' | 'agco'
+
+
+def _spmm(rows, cols, vals, x, n_dst):
+    """y = A @ x  (row-major edge walk, forward aggregation)."""
+    gathered = x[cols] * vals[:, None]
+    return jax.ops.segment_sum(gathered, rows, num_segments=n_dst)
+
+
+def _spmm_t(rows, cols, vals, e, n_src):
+    """y = Aᵀ @ e  without an Aᵀ table: same edges, roles swapped
+    (column-major walk = the Graph Converter's backward order)."""
+    gathered = e[rows] * vals[:, None]
+    return jax.ops.segment_sum(gathered, cols, num_segments=n_src)
+
+
+def _int_zero_ct(a):
+    """Cotangent for integer (index) inputs."""
+    return np.zeros(a.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core.  Static args: n_dst, n_src, order, activate.
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _gcn_layer(n_dst: int, n_src: int, order: Order, activate: bool,
+               rows, cols, vals, x, w):
+    if order == "coag":
+        z = _spmm(rows, cols, vals, x @ w, n_dst)
+    elif order == "agco":
+        z = _spmm(rows, cols, vals, x, n_dst) @ w
+    else:
+        raise ValueError(order)
+    return jnp.maximum(z, 0.0) if activate else z
+
+
+def _gcn_layer_fwd(n_dst, n_src, order, activate, rows, cols, vals, x, w):
+    if order == "coag":
+        z = _spmm(rows, cols, vals, x @ w, n_dst)
+        saved_feat = x                       # Table 1 Ours-CoAg: keep X, not Xᵀ
+    else:
+        ax = _spmm(rows, cols, vals, x, n_dst)
+        z = ax @ w
+        saved_feat = ax                      # Ours-AgCo: keep AX, not (AX)ᵀ
+    y = jnp.maximum(z, 0.0) if activate else z
+    mask = (z > 0) if activate else None     # σ' residual: 1 bit/elem, no copy of z
+    return y, (rows, cols, vals, saved_feat, w, mask)
+
+
+def _gcn_layer_bwd(n_dst, n_src, order, activate, res, ct):
+    rows, cols, vals, saved_feat, w, mask = res
+    dz = jnp.where(mask, ct, 0.0) if activate else ct          # σ'(E^{l+1})
+    if order == "coag":
+        x = saved_feat
+        # S = Aᵀ·dz via column-major walk of the SAME edge list
+        s = _spmm_t(rows, cols, vals, dz, n_src)                # [n_src, h]
+        # dX = S Wᵀ — contract over h; W consumed untransposed
+        dx = jnp.einsum("nh,dh->nd", s, w)
+        # dW = Xᵀ S — contract over n; X consumed untransposed
+        dw = jnp.einsum("nd,nh->dh", x, s)
+    else:
+        ax = saved_feat
+        # dW = (AX)ᵀ dz — contract over n; AX consumed untransposed
+        dw = jnp.einsum("nd,nh->dh", ax, dz)
+        # d(AX) = dz Wᵀ — contract over h
+        dax = jnp.einsum("nh,dh->nd", dz, w)
+        dx = _spmm_t(rows, cols, vals, dax, n_src)
+    dvals = jnp.zeros_like(vals)  # fixed normalized adjacency — not trained
+    return (_int_zero_ct(rows), _int_zero_ct(cols), dvals, dx, dw)
+
+
+_gcn_layer.defvjp(_gcn_layer_fwd, _gcn_layer_bwd)
+
+
+def gcn_layer(A: COO, x: jnp.ndarray, w: jnp.ndarray, *,
+              order: Order = "coag", activate: bool = True) -> jnp.ndarray:
+    """Public GCN/SAGE-mean layer: ``σ(A (X W))`` or ``σ((A X) W)`` with the
+    paper's transpose-free backward. ``A`` is the (rectangular) row-major COO
+    of this hop."""
+    if x.shape[0] != A.n_src:
+        raise ValueError(f"x rows {x.shape[0]} != A.n_src {A.n_src}")
+    return _gcn_layer(A.n_dst, A.n_src, order, activate,
+                      A.rows, A.cols, A.vals, x, w)
+
+
+def residual_bytes(order: Order, n_dst: int, n_src: int, d: int, h: int,
+                   dtype_bytes: int = 4) -> int:
+    """Storage the 'Ours' dataflow saves for backward (per layer): the
+    untransposed feature operand + 1-bit mask.  Used by tests/benchmarks to
+    compare against the baseline's transposed duplicates."""
+    feat = n_src * d if order == "coag" else n_dst * d
+    mask_bits = n_dst * h
+    return feat * dtype_bytes + mask_bits // 8

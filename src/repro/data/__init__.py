@@ -1,0 +1,6 @@
+from .tokens import (TokenPipeline, lm_batch_specs, make_lm_batch,
+                     synthetic_frames)
+from .graph_pipeline import GraphBatchPipeline
+
+__all__ = ["TokenPipeline", "lm_batch_specs", "make_lm_batch",
+           "synthetic_frames", "GraphBatchPipeline"]

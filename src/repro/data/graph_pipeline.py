@@ -1,0 +1,71 @@
+"""Graph mini-batch pipeline: sampler → static-shaped device batches.
+
+Wraps :class:`repro.graph.NeighborSampler` into the same restartable-stream
+contract as the token pipeline: the epoch permutation is derived from
+``(seed, epoch)`` so restore-from-checkpoint replays the exact remaining
+batches.  Shapes are padded to the per-layer static maxima so one jit trace
+serves every batch (the paper's fixed 1024-node staging serves the same
+purpose in BRAM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.datasets import GraphDataset
+from repro.graph.sampler import MiniBatch, NeighborSampler
+
+
+@dataclasses.dataclass
+class GraphBatchPipeline:
+    dataset: GraphDataset
+    sampler: NeighborSampler
+    batch_size: int
+    seed: int = 0
+    epoch: int = 0
+    batch_idx: int = 0
+
+    def _perm(self) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.epoch]))
+        return rng.permutation(self.dataset.graph.n_nodes)
+
+    def __iter__(self) -> Iterator[Tuple[MiniBatch, np.ndarray, np.ndarray]]:
+        return self
+
+    def __next__(self):
+        perm = self._perm()
+        n_batches = len(perm) // self.batch_size
+        if self.batch_idx >= n_batches:
+            self.epoch += 1
+            self.batch_idx = 0
+            perm = self._perm()
+        s = self.batch_idx * self.batch_size
+        seeds = perm[s:s + self.batch_size]
+        # per-batch generator keyed by (seed, epoch, batch): resume-exact
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.epoch, self.batch_idx]))
+        self.batch_idx += 1
+        mb = self.sampler.sample(seeds,
+                                 nnz_pad=self.sampler.static_nnz(
+                                     self.batch_size), rng=rng)
+        feats = self.dataset.features[np.minimum(
+            mb.input_nodes, self.dataset.graph.n_nodes - 1)]
+        if self.dataset.labels.ndim == 1:
+            pad = mb.layers[0].n_dst - len(seeds)
+            labels = self.dataset.labels[np.pad(seeds, (0, pad))]
+        else:
+            pad = mb.layers[0].n_dst - len(seeds)
+            labels = self.dataset.labels[np.pad(seeds, (0, pad))]
+        return mb, feats, labels
+
+    def state(self) -> Dict[str, int]:
+        return {"seed": self.seed, "epoch": self.epoch,
+                "batch_idx": self.batch_idx}
+
+    def restore(self, state: Dict[str, int]) -> None:
+        self.seed = int(state["seed"])
+        self.epoch = int(state["epoch"])
+        self.batch_idx = int(state["batch_idx"])

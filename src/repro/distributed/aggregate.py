@@ -1,0 +1,284 @@
+"""Distributed graph aggregation — the paper's NUMA + hypercube NoC on TPU.
+
+Placement (paper §4.1): node features are row-sharded over the ``model`` mesh
+axis — device *i* is core *i* and owns its rows' HBM exclusively (NUMA, no
+global addressing).  Each device also owns the edge blocks whose *sources*
+live on it (column *i* of the block grid): senders know their outgoing
+messages, exactly like the Block-Message buffers sit in the source core.
+
+Aggregation then runs in two stages inside ``shard_map``:
+
+  1. **Local pre-reduction** (the Index Compressor / Reduced Register File):
+     each device segment-sums its own sources into partial rows for *every*
+     destination core — a single SpMM against the local feature shard.  The
+     wire will carry one partial row per (block, aggregate-slot), never raw
+     neighbor rows: this is the paper's N ≤ nnz compression.
+
+  2. **Hypercube fold** (:func:`hypercube_reduce_scatter`): ``log₂P`` rounds
+     of pairwise ``ppermute`` along hypercube dimensions, high bit first.
+     Round *b* sends the half of the partial buffer owned by the other
+     half-cube and adds the received half — the dimension-ordered schedule of
+     :mod:`repro.core.schedule`, which Algorithm 1 degenerates to when every
+     wave is full (and which XLA can pipeline).  After the last round each
+     device holds exactly its own rows, fully reduced.
+
+The backward pass is the paper's Table-1 redesign, distributed: a
+``custom_vjp`` runs the *mirror* schedule — all-gather the error rows
+(:func:`hypercube_allgather`, the transpose of reduce-scatter) and walk the
+SAME local edge table column-major (``Aᵀ`` without an ``Aᵀ``) — so no
+transposed feature matrix and no second edge table exist on any device.
+
+A UMA/SMP baseline (:func:`uma_aggregate`) does what the paper argues
+against: all-gather raw features everywhere, aggregate redundantly, discard.
+The roofline benchmark counts both schedules' collective bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.coo import COO
+from repro.graph.partition import block_partition
+
+
+# ---------------------------------------------------------------------------
+# Collective building blocks (inside shard_map, axis = the "core" axis).
+# ---------------------------------------------------------------------------
+def _dim_perm(n_cores: int, bit: int) -> list:
+    return [(i, i ^ (1 << bit)) for i in range(n_cores)]
+
+
+def hypercube_reduce_scatter(partial: jnp.ndarray, axis_name: str,
+                             ndim: int) -> jnp.ndarray:
+    """Fold per-owner partials across the hypercube, high dimension first.
+
+    ``partial``: [P, t, ...] — row-blocks ordered by owner core id.  Returns
+    [t, ...]: this device's rows, fully reduced.  Because blocks are in
+    ascending core order and we process the top bit first, 'my half' is
+    always a contiguous slice — each round halves the buffer (the wire bytes
+    form the geometric series t·(1 − 1/P), same as a reduce-scatter).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    buf = partial
+    for b in reversed(range(ndim)):
+        half = buf.shape[0] // 2
+        low, high = buf[:half], buf[half:]
+        my_bit = (idx >> b) & 1
+        mine = jnp.where(my_bit == 0, low, high)
+        send = jnp.where(my_bit == 0, high, low)
+        recv = jax.lax.ppermute(send, axis_name, _dim_perm(n_cores, b))
+        buf = mine + recv
+    return buf[0]
+
+
+def hypercube_allgather(x: jnp.ndarray, axis_name: str, ndim: int
+                        ) -> jnp.ndarray:
+    """Mirror schedule (transpose of the reduce-scatter): after ``ndim``
+    doubling rounds every device holds [P, t, ...] in core order."""
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    buf = x[None]
+    for b in range(ndim):
+        other = jax.lax.ppermute(buf, axis_name, _dim_perm(n_cores, b))
+        my_bit = (idx >> b) & 1
+        lo = jnp.concatenate([buf, other], axis=0)
+        hi = jnp.concatenate([other, buf], axis=0)
+        buf = jnp.where(my_bit == 0, lo, hi)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Per-device edge shards (host-side build, done once per minibatch).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EdgeShards:
+    """Sender-side edge blocks, stacked per source core and padded.
+
+    rows_global: [P, e_max] int32 — destination id in GLOBAL row numbering
+                 (owner core × tile + slot; Fig. 7's A·64+B).
+    cols_local:  [P, e_max] int32 — source slot on the owning device (D).
+    vals:        [P, e_max] f32   — Ã weights (0 = padding).
+    """
+
+    rows_global: np.ndarray
+    cols_local: np.ndarray
+    vals: np.ndarray
+    n_dst: int
+    n_src: int
+    n_cores: int
+
+    @property
+    def dst_per_core(self) -> int:
+        return self.n_dst // self.n_cores
+
+    @property
+    def src_per_core(self) -> int:
+        return self.n_src // self.n_cores
+
+
+def shard_edges(coo: COO, n_cores: int,
+                e_max: Optional[int] = None) -> EdgeShards:
+    """Partition a (padded) COO by SOURCE core — column stripes of the block
+    grid — and pad each device's edge list to a common static length."""
+    blocked = block_partition(coo, n_cores)
+    spc = blocked.src_per_core
+    dpc = blocked.dst_per_core
+    per_core: list = [[] for _ in range(n_cores)]
+    for (i, j), (lr, lc, v) in blocked.block_edges.items():
+        per_core[j].append((lr.astype(np.int64) + i * dpc, lc, v))
+    if e_max is None:
+        e_max = max((sum(len(t[0]) for t in lst) for lst in per_core),
+                    default=1)
+        e_max = max(int(e_max), 1)
+    rows = np.zeros((n_cores, e_max), np.int32)
+    cols = np.zeros((n_cores, e_max), np.int32)
+    vals = np.zeros((n_cores, e_max), np.float32)
+    for j, lst in enumerate(per_core):
+        if not lst:
+            continue
+        r = np.concatenate([t[0] for t in lst])
+        c = np.concatenate([t[1] for t in lst])
+        v = np.concatenate([t[2] for t in lst])
+        if len(r) > e_max:
+            raise ValueError(f"core {j} has {len(r)} edges > e_max={e_max}")
+        rows[j, :len(r)] = r
+        cols[j, :len(c)] = c
+        vals[j, :len(v)] = v
+    return EdgeShards(rows_global=rows, cols_local=cols, vals=vals,
+                      n_dst=coo.n_dst, n_src=coo.n_src, n_cores=n_cores)
+
+
+# ---------------------------------------------------------------------------
+# The distributed aggregate, with the paper's backward dataflow (custom_vjp).
+# Shapes inside shard_map (per device): x_local [spc, d] -> y_local [dpc, d].
+# ---------------------------------------------------------------------------
+def _local_partials(rows_g, cols_l, vals, x_local, n_dst):
+    """Stage 1: partial rows for every destination core from local sources."""
+    gathered = x_local[cols_l] * vals[:, None]
+    return jax.ops.segment_sum(gathered, rows_g, num_segments=n_dst)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _hypercube_aggregate(axis_name: str, ndim: int, n_dst: int,
+                         rows_g, cols_l, vals, x_local):
+    n_cores = 1 << ndim
+    partial = _local_partials(rows_g, cols_l, vals, x_local, n_dst)
+    partial = partial.reshape(n_cores, n_dst // n_cores, -1)
+    return hypercube_reduce_scatter(partial, axis_name, ndim)
+
+
+def _hyper_fwd(axis_name, ndim, n_dst, rows_g, cols_l, vals, x_local):
+    y = _hypercube_aggregate(axis_name, ndim, n_dst, rows_g, cols_l, vals,
+                             x_local)
+    return y, (rows_g, cols_l, vals, x_local)
+
+
+def _hyper_bwd(axis_name, ndim, n_dst, res, ct):
+    rows_g, cols_l, vals, x_local = res
+    # mirror schedule: error rows of ALL cores (transpose of reduce-scatter)
+    e_full = hypercube_allgather(ct, axis_name, ndim)        # [P, dpc, d]
+    e_full = e_full.reshape(n_dst, -1)
+    # Aᵀ walk of the SAME local edge table (column-major = Graph Converter):
+    # dx[c] += v · e[r]  — consumes global rows, produces local cols.
+    n_src_local = x_local.shape[0]
+    gathered = e_full[rows_g] * vals[:, None]
+    dx_local = jax.ops.segment_sum(gathered, cols_l,
+                                   num_segments=n_src_local)
+    dvals = jnp.zeros_like(vals)   # adjacency weights are not trained
+    zr = np.zeros(rows_g.shape, dtype=jax.dtypes.float0)
+    zc = np.zeros(cols_l.shape, dtype=jax.dtypes.float0)
+    return (zr, zc, dvals, dx_local)
+
+
+_hypercube_aggregate.defvjp(_hyper_fwd, _hyper_bwd)
+
+
+def hypercube_aggregate(axis_name: str, ndim: int, n_dst: int,
+                        rows_g: jnp.ndarray, cols_l: jnp.ndarray,
+                        vals: jnp.ndarray, x_local: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Per-device body: ``y_local = (A @ x)_local`` via pre-reduce + fold.
+
+    Call inside ``shard_map`` over ``axis_name``; edge arrays are this
+    device's :class:`EdgeShards` slice, ``x_local`` its feature rows.
+    """
+    return _hypercube_aggregate(axis_name, ndim, n_dst, rows_g, cols_l,
+                                vals, x_local)
+
+
+def shard_edges_by_dst(coo: COO, n_cores: int,
+                       e_max: Optional[int] = None) -> EdgeShards:
+    """Receiver-side partition (UMA baseline): device *i* holds the edge
+    blocks whose DESTINATIONS live on it (row stripe *i*), with local row
+    slots and GLOBAL column ids — it must reach into remote memory for its
+    neighbors' features.  Reuses :class:`EdgeShards` with the roles of
+    ``rows``/``cols`` mirrored: ``rows_global`` ← local dst slot,
+    ``cols_local`` ← global src id."""
+    blocked = block_partition(coo, n_cores)
+    spc = blocked.src_per_core
+    per_core: list = [[] for _ in range(n_cores)]
+    for (i, j), (lr, lc, v) in blocked.block_edges.items():
+        per_core[i].append((lr, lc.astype(np.int64) + j * spc, v))
+    if e_max is None:
+        e_max = max((sum(len(t[0]) for t in lst) for lst in per_core),
+                    default=1)
+        e_max = max(int(e_max), 1)
+    rows = np.zeros((n_cores, e_max), np.int32)
+    cols = np.zeros((n_cores, e_max), np.int32)
+    vals = np.zeros((n_cores, e_max), np.float32)
+    for i, lst in enumerate(per_core):
+        if not lst:
+            continue
+        r = np.concatenate([t[0] for t in lst])
+        c = np.concatenate([t[1] for t in lst])
+        v = np.concatenate([t[2] for t in lst])
+        if len(r) > e_max:
+            raise ValueError(f"core {i} has {len(r)} edges > e_max={e_max}")
+        rows[i, :len(r)] = r
+        cols[i, :len(c)] = c
+        vals[i, :len(v)] = v
+    return EdgeShards(rows_global=rows, cols_local=cols, vals=vals,
+                      n_dst=coo.n_dst, n_src=coo.n_src, n_cores=n_cores)
+
+
+def uma_aggregate(axis_name: str, ndim: int, n_dst: int,
+                  rows_l: jnp.ndarray, cols_g: jnp.ndarray,
+                  vals: jnp.ndarray, x_local: jnp.ndarray) -> jnp.ndarray:
+    """UMA/SMP baseline (what the paper's Fig. 1 motivates AGAINST): every
+    device all-gathers the RAW feature shard — bytes ∝ n_src·d with **no
+    pre-reduction compression** — then aggregates its own rows from the
+    replicated copy (the shared-memory random-access pattern).  Edge arrays
+    come from :func:`shard_edges_by_dst`.  Kept for the collective-bytes
+    comparison benchmark (roofline's collective term)."""
+    n_cores = 1 << ndim
+    x_full = hypercube_allgather(x_local, axis_name, ndim)   # [P, spc, d] raw
+    x_full = x_full.reshape(-1, x_local.shape[-1])
+    gathered = x_full[cols_g] * vals[:, None]
+    return jax.ops.segment_sum(gathered, rows_l,
+                               num_segments=n_dst // n_cores)
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte accounting (feeds the roofline's collective term).
+# ---------------------------------------------------------------------------
+def schedule_bytes(n_dst: int, n_src: int, d: int, n_cores: int,
+                   dtype_bytes: int = 4) -> dict:
+    """Wire bytes per device, both schedules (analytic, matches the HLO).
+
+    hypercube: the reduce-scatter fold sends n_dst/2 + n_dst/4 + … + n_dst/P
+    pre-reduced rows = n_dst·(1 − 1/P) — independent of nnz (that is the
+    Block-Message compression).  UMA: the raw all-gather ships
+    n_src·(1 − 1/P) uncompressed rows and scales with neither schedule's
+    reduction — on dense-ish graphs hypercube also wins because partial rows
+    replace per-edge traffic."""
+    hyper = int(n_dst * (1 - 1 / n_cores)) * d * dtype_bytes
+    uma = int(n_src * (1 - 1 / n_cores)) * d * dtype_bytes
+    return {"hypercube_bytes_per_device": hyper,
+            "uma_bytes_per_device": uma,
+            "ratio": uma / max(hyper, 1)}

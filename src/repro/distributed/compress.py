@@ -1,0 +1,122 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+The paper's Weight Bank synchronizes global weights after every update; at
+1000+ nodes that synchronization is the collective-term bottleneck for small
+models (roofline: gradient bytes / link bw).  We provide an int8
+error-feedback compressed all-reduce built from the same hypercube rounds as
+the aggregation layer:
+
+  * reduce-scatter phase: each round quantizes the outgoing half to int8 with
+    one f32 scale per round (wire = 1 byte/elem + 4 bytes), dequantizes and
+    accumulates in f32 on arrival;
+  * all-gather phase: the fully-reduced shard is quantized once and doubled
+    around the cube in int8;
+  * error feedback: each device keeps the quantization residual of its OWN
+    contribution and re-injects it next step — the standard EF-SGD fix that
+    keeps compressed SGD convergent (Stich et al.); round-trip quantization
+    noise inside the fold is unbiased-ish and dominated by the EF term.
+
+Wire bytes drop 4× vs f32 (the roofline benchmark counts this), at the cost
+of int8 noise the tests bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _dim_perm(n: int, bit: int):
+    return [(i, i ^ (1 << bit)) for i in range(n)]
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, ndim: int) -> jnp.ndarray:
+    """int8 hypercube all-reduce of a flat f32 vector (call in shard_map).
+
+    ``x``: [n] with n divisible by P = 2**ndim.  Returns the f32 sum over the
+    axis, computed with int8 wire traffic.
+    """
+    n_cores = 1 << ndim
+    idx = jax.lax.axis_index(axis_name)
+    buf = x.reshape(n_cores, -1)
+    # --- reduce-scatter fold (int8 wire) ---
+    for b in reversed(range(ndim)):
+        half = buf.shape[0] // 2
+        low, high = buf[:half], buf[half:]
+        my_bit = (idx >> b) & 1
+        mine = jnp.where(my_bit == 0, low, high)
+        send = jnp.where(my_bit == 0, high, low)
+        q, s = _quant(send)
+        q_r = jax.lax.ppermute(q, axis_name, _dim_perm(n_cores, b))
+        s_r = jax.lax.ppermute(s, axis_name, _dim_perm(n_cores, b))
+        buf = mine + _dequant(q_r, s_r)
+    shard = buf[0]                                  # [n/P] fully reduced
+    # --- all-gather double (int8 wire) ---
+    q, s = _quant(shard)
+    qbuf = q[None]
+    sbuf = s[None]
+    for b in range(ndim):
+        q_r = jax.lax.ppermute(qbuf, axis_name, _dim_perm(n_cores, b))
+        s_r = jax.lax.ppermute(sbuf, axis_name, _dim_perm(n_cores, b))
+        my_bit = (idx >> b) & 1
+        qbuf = jnp.where(my_bit == 0,
+                         jnp.concatenate([qbuf, q_r]),
+                         jnp.concatenate([q_r, qbuf]))
+        sbuf = jnp.where(my_bit == 0,
+                         jnp.concatenate([sbuf, s_r]),
+                         jnp.concatenate([s_r, sbuf]))
+    out = _dequant(qbuf, sbuf[:, None])             # [P, n/P]
+    return out.reshape(-1)
+
+
+def ef_compress_grads(grads, err, axis_name: str, ndim: int):
+    """Error-feedback compressed all-reduce over a gradient pytree.
+
+    Returns (mean_grads, new_err).  Each leaf: inject residual, quantize the
+    contribution (that quantized value is what enters the fold), keep the new
+    residual locally.
+    """
+    n_cores = 1 << ndim
+
+    def one(g, e):
+        flat = g.reshape(-1)
+        pad = (-flat.shape[0]) % n_cores
+        flat = jnp.pad(flat, (0, pad))
+        corrected = flat + e
+        q, s = _quant(corrected)
+        contribution = _dequant(q, s)
+        new_e = corrected - contribution
+        summed = compressed_psum(contribution, axis_name, ndim)
+        return (summed[:g.size] / n_cores).reshape(g.shape), new_e
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+    return mean, new_err
+
+
+def init_error_state(params, n_cores: int):
+    """Zero EF residuals, one padded flat vector per parameter leaf."""
+    def one(p):
+        n = p.size + ((-p.size) % n_cores)
+        return jnp.zeros((n,), jnp.float32)
+    return jax.tree_util.tree_map(one, params)
+
+
+def compression_ratio(dtype_bytes: int = 4) -> float:
+    """Wire-byte ratio vs uncompressed f32 all-reduce (scales amortize out)."""
+    return dtype_bytes / 1.0

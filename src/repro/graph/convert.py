@@ -1,0 +1,44 @@
+"""Graph Converter — row-major ⇄ column-major COO re-sorting (paper §4.1).
+
+The accelerator stores each adjacency block exactly once (COO, diagonal
+storage) and *re-sorts* it between the forward pass (row-major: aggregate
+into destination rows) and the backward pass (column-major: aggregate into
+source columns, i.e. multiply by A^T) instead of storing an edge table twice.
+Table 3 attributes ~1 edge table of HBM savings to this.
+
+On TPU the analogous cost model holds: a sort is O(e log e) once per graph
+(host- or trace-time), while a materialized transpose of A would double HBM
+residency and the segment-sum SpMM wants its segment ids sorted for locality.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .coo import COO, from_edges
+
+
+def sort_row_major(coo: COO) -> COO:
+    """Sort edges by (row, col) — forward aggregation order."""
+    rows = np.asarray(coo.rows)
+    cols = np.asarray(coo.cols)
+    vals = np.asarray(coo.vals)
+    order = np.lexsort((cols, rows))
+    return from_edges(rows[order], cols[order], vals[order], coo.n_dst, coo.n_src)
+
+
+def sort_col_major(coo: COO) -> COO:
+    """Sort edges by (col, row) — backward aggregation order (A^T walk)."""
+    rows = np.asarray(coo.rows)
+    cols = np.asarray(coo.cols)
+    vals = np.asarray(coo.vals)
+    order = np.lexsort((rows, cols))
+    return from_edges(rows[order], cols[order], vals[order], coo.n_dst, coo.n_src)
+
+
+def to_backward(coo_row_major: COO) -> COO:
+    """Produce the backward-order view WITHOUT transposing: same edges,
+    column-major sort.  Consumers use :meth:`COO.rmatmul` on it.  This is the
+    transpose-free contract: no new edge table, no (n_src × n_dst) object."""
+    return sort_col_major(coo_row_major)

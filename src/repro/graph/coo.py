@@ -1,0 +1,135 @@
+"""COO graph containers and adjacency normalization.
+
+The paper stores the (sampled, rectangular) adjacency of every GCN layer in
+COO format and re-sorts it between row-major (forward aggregation) and
+column-major (backward aggregation) order instead of ever materializing A^T
+(Section 4.1, "Graph Converter").  This module provides the containers; the
+re-sorting lives in :mod:`repro.graph.convert`.
+
+Conventions
+-----------
+* ``rows`` index **destination** nodes (aggregate targets), ``cols`` index
+  **source** nodes (message producers):  ``y[r] += val * x[c]``.
+* Rectangular adjacencies (mini-batch sampling makes ``A in R^{n_dst x n_src}``)
+  are first-class citizens — the paper's C4 insight depends on them.
+* All index arrays are ``int32`` (TPU-friendly), values ``float32``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """A (possibly rectangular) sparse matrix in COO format.
+
+    ``nnz`` entries may include padding: padded entries carry ``val == 0`` and
+    point at row/col 0, so every dense op treats them as no-ops.  Static
+    shapes (``n_dst``, ``n_src``, padded ``nnz``) keep the whole structure
+    jit-stable across mini-batches.
+    """
+
+    rows: jnp.ndarray  # [nnz] int32, destination ids
+    cols: jnp.ndarray  # [nnz] int32, source ids
+    vals: jnp.ndarray  # [nnz] float32, edge weights (0 == padding)
+    n_dst: int
+    n_src: int
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.vals), (self.n_dst, self.n_src)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, vals = children
+        return cls(rows=rows, cols=cols, vals=vals, n_dst=aux[0], n_src=aux[1])
+
+    # -- basic ops ----------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    def todense(self) -> jnp.ndarray:
+        dense = jnp.zeros((self.n_dst, self.n_src), self.vals.dtype)
+        return dense.at[self.rows, self.cols].add(self.vals)
+
+    def transpose(self) -> "COO":
+        """Explicit transpose (baseline dataflow only — the paper avoids this)."""
+        return COO(rows=self.cols, cols=self.rows, vals=self.vals,
+                   n_dst=self.n_src, n_src=self.n_dst)
+
+    def matmul(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Reference SpMM  ``y = A @ x``  via segment-sum (pure jnp oracle)."""
+        gathered = x[self.cols] * self.vals[:, None]
+        return jax.ops.segment_sum(gathered, self.rows, num_segments=self.n_dst)
+
+    def rmatmul(self, e: jnp.ndarray) -> jnp.ndarray:
+        """``y = A^T @ e`` *without* materializing A^T: swap index roles.
+
+        This is the Graph Converter in one line — backward aggregation walks
+        the same edge list with (row, col) roles exchanged.
+        """
+        gathered = e[self.rows] * self.vals[:, None]
+        return jax.ops.segment_sum(gathered, self.cols, num_segments=self.n_src)
+
+
+def pad_coo(coo: COO, nnz_padded: int) -> COO:
+    """Pad the edge list to a static size (val=0 ⇒ no-op edges)."""
+    if coo.nnz > nnz_padded:
+        raise ValueError(f"nnz {coo.nnz} exceeds padded size {nnz_padded}")
+    pad = nnz_padded - coo.nnz
+    return COO(
+        rows=jnp.pad(coo.rows, (0, pad)),
+        cols=jnp.pad(coo.cols, (0, pad)),
+        vals=jnp.pad(coo.vals, (0, pad)),
+        n_dst=coo.n_dst,
+        n_src=coo.n_src,
+    )
+
+
+def from_edges(rows, cols, vals, n_dst: int, n_src: int) -> COO:
+    return COO(
+        rows=jnp.asarray(rows, jnp.int32),
+        cols=jnp.asarray(cols, jnp.int32),
+        vals=jnp.asarray(vals, jnp.float32),
+        n_dst=int(n_dst),
+        n_src=int(n_src),
+    )
+
+
+def sym_normalize(rows: np.ndarray, cols: np.ndarray, n: int,
+                  add_self_loops: bool = True) -> COO:
+    """GCN normalization  Ã = D̃^{-1/2} (A + I) D̃^{-1/2}  (square graphs).
+
+    Host-side (numpy) — this is data-pipeline work, done once per graph.
+    """
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    if add_self_loops:
+        loop = np.arange(n, dtype=np.int64)
+        rows = np.concatenate([rows, loop])
+        cols = np.concatenate([cols, loop])
+    deg = np.bincount(rows, minlength=n).astype(np.float64)
+    # undirected symmetric normalization uses both-sided degree
+    deg_c = np.bincount(cols, minlength=n).astype(np.float64)
+    d_r = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    d_c = 1.0 / np.sqrt(np.maximum(deg_c, 1.0))
+    vals = d_r[rows] * d_c[cols]
+    return from_edges(rows, cols, vals.astype(np.float32), n, n)
+
+
+def mean_normalize(rows: np.ndarray, cols: np.ndarray,
+                   n_dst: int, n_src: int) -> COO:
+    """Row-mean normalization  D^{-1} A  — used for the rectangular sampled
+    layer adjacencies of GraphSAGE-style mini-batch training."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    deg = np.bincount(rows, minlength=n_dst).astype(np.float64)
+    vals = (1.0 / np.maximum(deg, 1.0))[rows]
+    return from_edges(rows, cols, vals.astype(np.float32), n_dst, n_src)

@@ -1,0 +1,12 @@
+# The paper's two compute hot-spots, as Pallas TPU kernels:
+#   gemm.py  — combination engine (2-D MAC adder tree -> MXU tiles)
+#   spmm.py  — aggregation engine (COO MAC chains -> dual one-hot matmuls)
+#   flash.py — flash attention (the prefill memory wall found in §Perf)
+# ops.py holds the jit'd public wrappers (interpret=True off-TPU),
+# ref.py the pure-jnp oracles the tests sweep against.
+from .ops import gemm, spmm
+from .flash import flash_mha
+from .ref import gemm_ref, mha_ref, spmm_ref, spmm_t_ref
+
+__all__ = ["gemm", "spmm", "flash_mha", "gemm_ref", "mha_ref", "spmm_ref",
+           "spmm_t_ref"]

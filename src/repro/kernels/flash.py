@@ -1,0 +1,111 @@
+"""Pallas flash-attention kernel — the TPU fix for the prefill memory wall.
+
+§Perf (EXPERIMENTS.md, chameleon × prefill_32k) showed the 32k cells are
+memory-bound on flash-block traffic: the pure-jnp online-softmax path still
+round-trips every [q_block, k_block] score tile through HBM at XLA's fusion
+boundaries.  The roofline lever is to pin the running state (m, l, acc) and
+the score tile in VMEM across the KV sweep — exactly what a Pallas kernel
+expresses and XLA-from-jnp cannot:
+
+  * grid = (batch·heads, n_q_blocks, n_kv_blocks), KV innermost;
+  * BlockSpecs stage [q_block, hd] of Q (held across the KV sweep) and
+    [k_block, hd] of K/V per step into VMEM;
+  * m/l/acc live in VMEM scratch for the whole sweep — HBM traffic is
+    Q+K+V read once per sweep + O written once: O(s·d), not O(s²);
+  * causal masking from grid indices (`broadcasted_iota` + program_id) —
+    fully-masked tiles short-circuit via ``pl.when`` (the s²/2 saving that
+    the pure-jnp pair enumeration could not express without wrecking the
+    GSPMD schedule).
+
+Validated in interpret mode against :func:`repro.kernels.ref.mha_ref`
+(tests/test_kernels.py); on-TPU compilation is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  n_k: int, q_block: int, k_block: int, causal: bool,
+                  scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: tiles strictly above the diagonal contribute nothing
+    live = (j * k_block <= i * q_block + q_block - 1) if causal else True
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0]                                   # [qb, hd]
+        k = k_ref[0]                                   # [kb, hd]
+        logits = jnp.dot(q, k.T,
+                         preferred_element_type=jnp.float32) * scale
+        if causal:
+            i_ids = i * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 0)
+            j_ids = j * k_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 1)
+            logits = jnp.where(j_ids <= i_ids, logits, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "k_block",
+                                             "interpret"))
+def flash_mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, q_block: int = 256, k_block: int = 256,
+              interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: [bh, s, hd] (heads flattened into the leading dim; GQA repeat
+    is the caller's reshape) → o: [bh, s, hd]."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    if sq % q_block or sk % k_block:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by blocks "
+                         f"({q_block},{k_block})")
+    grid = (bh, sq // q_block, sk // k_block)
+    kernel = functools.partial(_flash_kernel, n_k=grid[2], q_block=q_block,
+                               k_block=k_block, causal=causal,
+                               scale=1.0 / float(hd) ** 0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),     # running max
+            pltpu.VMEM((q_block, 1), jnp.float32),     # running denom
+            pltpu.VMEM((q_block, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Blocked GEMM Pallas kernel — the paper's combination engine on the MXU.
+
+The FPGA core does block matrix multiplication on a 2-D MAC adder tree fed
+from ping-pong Feature/Output buffers (paper §4.2, 256 TF32 MACs).  The TPU
+equivalent is an MXU-tiled matmul with fp32 accumulation and the epilogue
+(bias + ReLU, the GCN layer's σ) fused into the last K-step so the activation
+never round-trips to HBM:
+
+  * grid = (M/bm, N/bn, K/bk), K innermost so the VMEM accumulator scratch
+    carries across the K-steps of one (i, j) tile;
+  * BlockSpecs stage (bm, bk) of X and (bk, bn) of W into VMEM per step —
+    the ping-pong buffering is what ``pallas_call`` pipelining does natively;
+  * tile dims default to 128 = MXU lane width (the hardware-aligned multiple
+    the roofline wants); fp32 accumulation matches the paper's
+    TF32-multiply/FP32-accumulate MACs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                 relu: bool, has_bias: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "relu",
+                                             "interpret"))
+def gemm(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+         *, bm: int = 128, bn: int = 128, bk: int = 128, relu: bool = False,
+         interpret: bool = False) -> jnp.ndarray:
+    """``relu(x @ w + bias)`` with (bm, bn, bk) VMEM tiles.
+
+    Shapes must be tile-aligned (pad first — the layer code pads node counts
+    to the core multiple anyway); ``bias`` is [n], broadcast over rows.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k})x({k},{n}) not divisible by "
+                         f"tiles ({bm},{bn},{bk})")
+    has_bias = bias is not None
+    if not has_bias:
+        bias = jnp.zeros((n,), x.dtype)
+    bias2d = bias.reshape(1, n)  # TPU wants ≥2-D operands
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_gemm_kernel, n_k=grid[2], relu=relu,
+                               has_bias=has_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, bias2d)

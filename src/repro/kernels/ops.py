@@ -1,0 +1,62 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they run in ``interpret=True`` mode, which executes the kernel body on the
+Python/numpy path — same tiling, same math, no MXU.  Callers never pass
+``interpret`` themselves; they get the right backend automatically.
+
+The wrappers also absorb tile-alignment padding so layer code can call them
+on the paper's natural sizes (64-node core blocks, ragged feature dims).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import gemm as _gemm
+from . import spmm as _spmm
+from . import ref as ref  # re-export for tests/benchmarks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def gemm(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+         *, relu: bool = False, bm: int = 128, bn: int = 128, bk: int = 128
+         ) -> jnp.ndarray:
+    """Tile-padding wrapper over :func:`repro.kernels.gemm.gemm`."""
+    m, k = x.shape
+    _, n = w.shape
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(bias, 0, bn) if bias is not None else None
+    out = _gemm.gemm(xp, wp, bp, bm=bm, bn=bn, bk=bk, relu=relu,
+                     interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+         x: jnp.ndarray, n_dst: int, *, bd: int = 128, be: int = 256
+         ) -> jnp.ndarray:
+    """Tile-padding wrapper over :func:`repro.kernels.spmm.spmm`."""
+    d = x.shape[1]
+    rp = _pad_to(rows, 0, be)
+    cp = _pad_to(cols, 0, be)
+    vp = _pad_to(vals, 0, be)          # zero padding ⇒ no-op edges
+    xp = _pad_to(x, 1, bd)
+    out = _spmm.spmm(rp, cp, vp, xp, n_dst, bd=bd, be=be,
+                     interpret=not _on_tpu())
+    return out[:, :d]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` — no Pallas, no tiling, just the math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+             *, relu: bool = False) -> jnp.ndarray:
+    """Combination engine oracle: ``relu(x @ w + bias)`` in fp32 accumulation."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def spmm_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+             x: jnp.ndarray, n_dst: int) -> jnp.ndarray:
+    """Aggregation engine oracle: ``y[r] += v * x[c]`` via segment-sum.
+
+    Padding edges carry ``val == 0`` so they are no-ops regardless of their
+    (row, col) values.
+    """
+    gathered = x[cols].astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
+    out = jax.ops.segment_sum(gathered, rows, num_segments=n_dst)
+    return out.astype(x.dtype)
+
+
+def spmm_t_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+               e: jnp.ndarray, n_src: int) -> jnp.ndarray:
+    """Backward-order aggregation oracle: ``y = Aᵀ e`` walking the same COO
+    column-major (the Graph Converter contract — no Aᵀ table)."""
+    gathered = e[rows].astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
+    out = jax.ops.segment_sum(gathered, cols, num_segments=n_src)
+    return out.astype(e.dtype)
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            *, causal: bool = True) -> jnp.ndarray:
+    """Flash-attention oracle: q/k/v [bh, s, hd] → [bh, s, hd]."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqd,bkd->bqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        i = jnp.arange(q.shape[1])[:, None]
+        j = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(j <= i, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)

@@ -1,0 +1,95 @@
+"""Block-COO SpMM Pallas kernel — the paper's aggregation engine, MXU-native.
+
+The FPGA aggregates with scalar MAC chains over COO edges streamed from the
+Neighbor FIFO (paper §4.2).  A TPU has no efficient scalar scatter-add; the
+hardware-codesign move is to *densify per edge-chunk*: an edge chunk of E
+edges against a dst-tile of R rows and a src-tile of S rows becomes two tiny
+one-hot matmuls that run on the MXU,
+
+    G   = onehot(cols)  @ X_tile          # [E, S] @ [S, bd]  — the gather
+    acc += (onehot(rows) * vals) @ G      # [R, E] @ [E, bd]  — the scatter-add
+
+so aggregation uses exactly the same compute unit as combination — the
+paper's *unified aggregation+combination engine* argument (§5.4: one engine,
+no Systolic/Scatter/Gather imbalance), transplanted to the MXU.
+
+Tiling: grid = (d/bd, e/be) with the edge dimension innermost; the fp32
+accumulator tile [n_dst, bd] lives in VMEM scratch across edge chunks.  The
+dst tile (paper: 64 nodes/core) is small by construction — it is one core's
+Aggregate Buffer — so [n_dst, bd] fits VMEM comfortably.  Padding edges have
+val == 0 ⇒ their one-hot column is zeroed ⇒ no-ops, matching ref.spmm_ref.
+
+Index arrays arrive as [1, e] int32 (TPU wants ≥2-D); one (1, be) chunk is
+staged into VMEM per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
+                 n_e: int, n_dst: int, n_src: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = rows_ref[0, :]                       # [be] int32
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]                       # [be] f32 (0 = padding)
+    be = rows.shape[0]
+    x = x_ref[...]                              # [n_src, bd] VMEM tile
+
+    # gather via one-hot matmul: G[e, :] = x[cols[e], :]
+    src_iota = jax.lax.broadcasted_iota(jnp.int32, (be, n_src), 1)
+    onehot_src = (src_iota == cols[:, None]).astype(x.dtype)
+    g = jnp.dot(onehot_src, x, preferred_element_type=jnp.float32)
+
+    # scatter-add via one-hot matmul, edge weights folded into the one-hot
+    dst_iota = jax.lax.broadcasted_iota(jnp.int32, (n_dst, be), 0)
+    onehot_dst = jnp.where(dst_iota == rows[None, :], vals[None, :], 0.0)
+    acc_ref[...] += jnp.dot(onehot_dst.astype(jnp.float32), g,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_e - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst", "bd", "be", "interpret"))
+def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+         x: jnp.ndarray, n_dst: int, *, bd: int = 128, be: int = 256,
+         interpret: bool = False) -> jnp.ndarray:
+    """``y[r] += v * x[c]`` over a COO edge list, y: [n_dst, d].
+
+    ``n_dst`` is one core-block's row count (the Aggregate Buffer size);
+    ``x`` is the VMEM-resident dense source block.  Edge count and feature
+    dim must be multiples of (be, bd) — pad edges with val=0.
+    """
+    e = rows.shape[0]
+    n_src, d = x.shape
+    if e % be or d % bd:
+        raise ValueError(f"e={e}, d={d} not divisible by (be={be}, bd={bd})")
+    grid = (d // bd, e // be)
+    kernel = functools.partial(_spmm_kernel, n_e=grid[1], n_dst=n_dst,
+                               n_src=n_src)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, be), lambda j, k: (0, k)),
+            pl.BlockSpec((1, be), lambda j, k: (0, k)),
+            pl.BlockSpec((1, be), lambda j, k: (0, k)),
+            pl.BlockSpec((n_src, bd), lambda j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_dst, bd), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_dst, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n_dst, bd), jnp.float32)],
+        interpret=interpret,
+    )(rows.reshape(1, e).astype(jnp.int32),
+      cols.reshape(1, e).astype(jnp.int32),
+      vals.reshape(1, e).astype(jnp.float32), x)

@@ -1,0 +1,417 @@
+"""Post-SPMD HLO accounting — the dry-run's 'profiler'.
+
+No real TPU exists here, so the compiled artifact IS the profile.  XLA's
+``cost_analysis()`` counts while-loop bodies ONCE, which silently drops
+~n_layers× of the compute in scan-over-layers models (verified in
+tests/test_hlo_analysis.py), so this module does its own accounting over
+``compiled.as_text()``:
+
+  1. parse computations and the call graph (while body/condition with
+     ``known_trip_count``, fusion ``calls=``, ``to_apply=``), and propagate a
+     *execution multiplier* to every computation;
+  2. FLOPs: every ``dot`` op = 2 · |out| · |contracted| (einsums, matmuls —
+     elementwise is negligible at roofline granularity), × multiplier;
+  3. HBM bytes: per op at fusion boundaries (operands + outputs, skipping
+     bookkeeping ops) — the bytes a perfectly-fused executor moves, which is
+     the right memory-roofline proxy;
+  4. collective wire bytes: all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute sizes × ring cost × multiplier:
+        all-reduce        2·(g−1)/g · size
+        all-gather          (g−1)/g · size     (size = full output)
+        reduce-scatter      (g−1)/g · size·g   (size = per-shard output)
+        all-to-all          (g−1)/g · size
+        collective-permute            size
+     with g = replica-group size parsed from the op line.
+
+Roofline terms (seconds) then follow from the hardware constants in
+launch/mesh.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|"
+    r"c64|c128)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_RG_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_SKIP_OPS = {"parameter", "get-tuple-element", "tuple", "constant", "copy",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all tensors mentioned in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_types: str         # text before the op kind (shapes of results)
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    symbols: Dict[str, str]   # %name -> result type text
+
+
+_KIND_RE = re.compile(r"^\s*(?:\(?[a-z0-9_\[\],\s\{\}]*\)?\s*)?([a-z][\w\-]*)\(")
+
+
+def _parse_op_kind(rhs: str) -> Tuple[str, str]:
+    """rhs like 'f32[128,256]{1,0} dot(%a, %b), attrs...' or
+    '(s32[], f32[8]{0}) while(%t), ...' → (op kind, result type text)."""
+    s = rhs.strip()
+    if s.startswith("("):                 # tuple-typed result
+        depth = 0
+        end = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        result = s[:end + 1]
+        rest = s[end + 1:].strip()
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return "", s
+        result = s[:sp]
+        rest = s[sp + 1:].strip()
+    m = re.match(r"([a-z][\w\-]*)\(", rest)
+    kind = m.group(1) if m else ""
+    return kind, result
+
+
+def parse_computations(hlo_text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        m = _COMP_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = _Computation(name=m.group(1), ops=[], symbols={})
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(stripped)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        kind, result_types = _parse_op_kind(rhs)
+        cur.symbols[name] = result_types or rhs
+        cur.ops.append(_Op(name=name, kind=kind, result_types=result_types,
+                           line=stripped))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _call_edges(comp: _Computation) -> List[Tuple[str, float]]:
+    """(callee, multiplier) edges out of this computation."""
+    edges = []
+    for op in comp.ops:
+        if op.kind == "while":
+            m = re.search(r"condition=%?([\w.\-]+)", op.line)
+            c = m.group(1) if m else None
+            m = re.search(r"body=%?([\w.\-]+)", op.line)
+            b = m.group(1) if m else None
+            t = _TRIP_RE.search(op.line)
+            trips = float(t.group(1)) if t else 1.0
+            if b:
+                edges.append((b, trips))
+            if c:
+                edges.append((c, trips + 1))
+        elif "calls=" in op.line:
+            for callee in re.findall(r"calls=%?([\w.\-]+)", op.line):
+                edges.append((callee, 1.0))
+        elif "to_apply=" in op.line and op.kind not in (
+                "reduce", "all-reduce", "reduce-scatter", "scatter",
+                "reduce-window", "sort", "select-and-scatter"):
+            m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+            if m:
+                edges.append((m.group(1), 1.0))
+        elif "branch_computations=" in op.line:
+            for callee in re.findall(r"%([\w.\-]+)",
+                                     op.line.split("branch_computations=")[1]):
+                edges.append((callee, 1.0))
+    return edges
+
+
+def computation_multipliers(comps: Dict[str, _Computation]) -> Dict[str, float]:
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = {c: 0.0 for c in comps if c != "__entry__"}
+    if entry is None:
+        return mult
+    mult[entry.name] = 1.0
+    # propagate through the DAG (few passes suffice; guard with cap)
+    for _ in range(64):
+        changed = False
+        for cname, comp in comps.items():
+            if cname == "__entry__":
+                continue
+            m = mult.get(cname, 0.0)
+            if m <= 0:
+                continue
+            for callee, k in _call_edges(comp):
+                if callee not in mult:
+                    continue
+                new = 0.0
+                # recompute callee multiplier from ALL callers
+                for caller2, comp2 in comps.items():
+                    if caller2 == "__entry__":
+                        continue
+                    for c2, k2 in _call_edges(comp2):
+                        if c2 == callee:
+                            new += mult.get(caller2, 0.0) * k2
+                if abs(new - mult[callee]) > 1e-9:
+                    mult[callee] = new
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    _, out_dims = _first_shape(op.result_types)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    operands = _OPERAND_RE.findall(op.line.split("(", 1)[1].split(")", 1)[0])
+    contract = 1
+    if operands:
+        lhs_type = symbols.get(operands[0], "")
+        _, lhs_dims = _first_shape(lhs_type)
+        for cd in cdims:
+            if cd < len(lhs_dims):
+                contract *= lhs_dims[cd]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+def _collective_wire(op: _Op, world: int) -> Tuple[str, float]:
+    kind = op.kind.replace("-start", "")
+    size = _shape_bytes(op.result_types)
+    g = _group_size(op.line, world)
+    if g <= 1:
+        return kind, 0.0
+    if kind == "all-reduce":
+        return kind, 2.0 * (g - 1) / g * size
+    if kind == "all-gather":
+        return kind, (g - 1) / g * size
+    if kind == "reduce-scatter":
+        return kind, (g - 1) / g * size * g
+    if kind == "all-to-all":
+        return kind, (g - 1) / g * size
+    if kind == "collective-permute":
+        return kind, float(size)
+    return kind, 0.0
+
+
+_SLICE_KINDS = {"dynamic-slice", "slice", "gather", "dynamic-update-slice"}
+
+
+def _op_bytes(op: _Op, symbols: Dict[str, str],
+              slice_params: Optional[Dict[str, set]] = None) -> float:
+    """HBM traffic of one op: output + operand bytes.
+
+    Slice-like ops read only their window, not the whole operand — charging
+    full operand bytes made a loop that block-slices a resident tensor look
+    like it re-streams the tensor every iteration (observed 30× overcount
+    on flash attention).  ``slice_params``: per-fusion-computation names of
+    parameters consumed ONLY by slice ops inside — charged at output size.
+    """
+    if op.kind in _SKIP_OPS or not op.kind:
+        return 0.0
+    out = _shape_bytes(op.result_types)
+    if op.kind in _SLICE_KINDS:
+        return float(2 * out)           # read window + write result
+    sliced: set = set()
+    if slice_params is not None and "calls=" in op.line:
+        m = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if m:
+            sliced = slice_params.get(m.group(1), set())
+    args = 0.0
+    arg_str = op.line.split("(", 1)
+    if len(arg_str) > 1:
+        for idx, operand in enumerate(
+                _OPERAND_RE.findall(arg_str[1].split(")", 1)[0])):
+            full = _shape_bytes(symbols.get(operand, ""))
+            if idx in sliced:
+                args += min(full, out)   # windowed read
+            else:
+                args += full
+    return float(out + args)
+
+
+def _fusion_slice_params(comps: Dict[str, "_Computation"]) -> Dict[str, set]:
+    """For each computation: indices of parameters whose ONLY uses inside
+    are slice-like ops (the fusion reads a window of that operand)."""
+    out: Dict[str, set] = {}
+    for comp in comps.values():
+        param_of = {}
+        for op in comp.ops:
+            if op.kind == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.line)
+                if m:
+                    param_of[op.name] = int(m.group(1))
+        if not param_of:
+            continue
+        uses: Dict[str, List[str]] = {n: [] for n in param_of}
+        for op in comp.ops:
+            if op.kind == "parameter":
+                continue
+            arg_str = op.line.split("(", 1)
+            if len(arg_str) < 2:
+                continue
+            for operand in _OPERAND_RE.findall(arg_str[1].split(")", 1)[0]):
+                if operand in uses:
+                    uses[operand].append(op.kind)
+        good = set()
+        for name, kinds in uses.items():
+            if kinds and all(k in _SLICE_KINDS for k in kinds):
+                good.add(param_of[name])
+        if good:
+            out[comp.name] = good
+    return out
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float
+    hbm_bytes: float
+    collective_wire_bytes: float
+    by_kind: Dict[str, float]
+    by_kind_count: Dict[str, int]
+
+
+def analyze_hlo(hlo_text: str, world: int = 1) -> HLOStats:
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    # fusion-called computations contribute their DOT flops at the caller's
+    # multiplier, but their internal op bytes are inside the fusion boundary
+    called_by_fusion = set()
+    for comp in comps.values():
+        if comps.get("__entry__") is comp:
+            continue
+        for op in comp.ops:
+            if "calls=" in op.line:
+                for callee in re.findall(r"calls=%?([\w.\-]+)", op.line):
+                    called_by_fusion.add(callee)
+
+    slice_params = _fusion_slice_params(comps)
+    flops = 0.0
+    hbm = 0.0
+    wire: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    seen = set()
+    for cname, comp in comps.items():
+        if cname == "__entry__" or comp.name in seen:
+            continue
+        seen.add(comp.name)
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        fused = comp.name in called_by_fusion
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp.symbols)
+            base_kind = op.kind.replace("-start", "")
+            if base_kind in _COLLECTIVES and "-done" not in op.kind:
+                k, w = _collective_wire(op, world)
+                wire[k] = wire.get(k, 0.0) + m * w
+                counts[k] = counts.get(k, 0) + 1
+            if not fused:
+                hbm += m * _op_bytes(op, comp.symbols, slice_params)
+    return HLOStats(flops=flops, hbm_bytes=hbm,
+                    collective_wire_bytes=sum(wire.values()),
+                    by_kind=wire, by_kind_count=counts)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   n_chips: int, *, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 50e9
+                   ) -> Dict[str, float]:
+    """Three roofline terms in seconds (inputs are PER-DEVICE: the compiled
+    SPMD module is one partition)."""
+    t_compute = flops / peak_flops
+    t_memory = hbm_bytes / hbm_bw
+    t_coll = wire_bytes / ici_bw
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant}
+
+
+# Backwards-compatible helper used by benchmarks: collective bytes only.
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: Dict[str, float]
+    by_kind_count: Dict[str, int]
+    total_wire_bytes: float
+
+
+def collective_bytes(hlo_text: str, world: int = 1) -> CollectiveStats:
+    st = analyze_hlo(hlo_text, world)
+    return CollectiveStats(by_kind=st.by_kind, by_kind_count=st.by_kind_count,
+                           total_wire_bytes=st.collective_wire_bytes)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips; the 16-way model
+axis is the paper's 4-D hypercube (16 = 2⁴) for the GCN path and TP/EP for
+the LM archs.  Multi-pod: (2, 16, 16) over ("pod", "data", "model") — the
+"pod" axis is an outer data-parallel axis whose collectives cross the
+inter-pod links (DCN in a real deployment).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init; smoke
+tests and benches see the real 1-CPU backend).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests: small meshes on the 16 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# Hardware constants (TPU v5e-like target, per assignment):
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,308 @@
+"""Step builders + sharding assignment — shared by dryrun/train/serve.
+
+``abstract_inputs(cfg, shape, mesh)`` returns ShapeDtypeStructs (WITH
+NamedShardings attached) for every input of the cell's step function;
+``build_step(cfg, kind)`` returns the jit-able callable.  The dry-run lowers
+``jit(step).lower(*abstract)`` — no array is ever materialized for the full
+configs.
+
+Sharding assignment is rule-based (megatron TP pairing, EP on experts,
+vocab-sharded embeddings, DP on batch) with a divisibility SANITIZER: any
+named axis that does not evenly divide its dim is dropped to None — this is
+what makes odd dims (llama4's 40 heads, seamless' 256206 vocab, mamba2's
+50280 vocab, long_500k's batch=1) lower cleanly instead of erroring, at the
+cost of extra collectives the roofline then exposes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.configs import Shape
+from repro.optim import adamw
+
+MODEL = "model"
+
+# leaf-name → trailing-dim spec (layer-stack leading dims are prepended)
+_COL = (None, MODEL)       # output-dim sharded
+_ROW = (MODEL, None)       # input-dim sharded (psum after)
+_NAME_RULES: Dict[str, Tuple] = {
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    "w_z": _COL, "w_x": _COL, "w_dt": _COL, "out_proj": _ROW,
+    "w_B": (), "w_C": (), "router": (),
+    "conv_wx": (None, MODEL), "conv_bx": (MODEL,),
+    "conv_wB": (), "conv_bB": (), "conv_wC": (), "conv_bC": (),
+    "dt_bias": (MODEL,), "A_log": (MODEL,), "D": (MODEL,),
+    "norm_g": (MODEL,),
+    "embed": (MODEL, None),             # vocab-sharded
+    "lm_head": (None, MODEL),
+}
+# MoE expert stacks [e, d, f]: EP over experts + FSDP over the data axes on
+# d — without the data shard a 400B-expert arch (llama4) cannot fit HBM;
+# GSPMD all-gathers the shard per layer use (the standard FSDP trade).
+_DP = "__dp__"                         # placeholder → dp_axes(mesh)
+_EXPERT_RULES: Dict[str, Tuple] = {
+    "w_gate": (MODEL, _DP, None), "w_up": (MODEL, _DP, None),
+    "w_down": (MODEL, _DP, None),
+}
+_STACK_KEYS = {"layers", "moe_layers", "dense_layers", "enc_layers",
+               "dec_layers", "mamba_layers"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(str(p.name))
+    return tuple(out)
+
+
+def sanitize(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis names that don't divide their dim (or don't exist)."""
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        ok = True
+        for a in axes:
+            if a not in mesh.shape:
+                ok = False
+                break
+            size *= mesh.shape[a]
+        fixed.append(ax if ok and dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_spec(path, leaf_shape: Tuple[int, ...], mesh: Mesh) -> P:
+    names = _path_names(path)
+    if not names:
+        return P()
+    name = names[-1]
+    if name.startswith("x_"):          # cross-attention clones
+        name = name[2:]
+    stacked = any(k in _STACK_KEYS for k in names[:-1])
+    base_ndim = len(leaf_shape) - (1 if stacked else 0)
+    rules = _NAME_RULES
+    if name in _EXPERT_RULES and base_ndim == 3:
+        rules = _EXPERT_RULES
+    trailing = [dp_axes(mesh) if ax == _DP else ax
+                for ax in rules.get(name, ())]
+    spec = ((None,) if stacked else ()) + tuple(trailing)
+    return sanitize(spec, leaf_shape, mesh)
+
+
+def zero1_spec(pspec: P, leaf_shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: shard optimizer moments over the data axes too — inject the
+    dp axes on the first still-unsharded divisible dim.  The f32 moments are
+    the memory bulk at scale; GSPMD turns the grad reduction into
+    reduce-scatter + the param update into all-gather automatically."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return pspec
+    used = set()
+    for ax in pspec:
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            if a:
+                used.add(a)
+    if any(a in used for a in dp):
+        return pspec
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    new = list(pspec) + [None] * (len(leaf_shape) - len(pspec))
+    for i, (ax, dim) in enumerate(zip(new, leaf_shape)):
+        if ax is None and dim % size == 0 and dim >= size:
+            new[i] = dp
+            break
+    return P(*new)
+
+
+def tree_shardings(tree_sds: Any, mesh: Mesh, *, zero1: bool = False) -> Any:
+    """Shardings for a pytree of ShapeDtypeStructs via the param rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_sds)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(path, leaf.shape, mesh)
+        if zero1:
+            spec = zero1_spec(spec, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _with_sharding(tree_sds: Any, shardings: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, shardings)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per cell
+# ---------------------------------------------------------------------------
+def _batch_specs(cfg: ArchConfig, shape: Shape, mesh: Mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        # enc side carries seq_len frames; dec side trains on seq_len//4 text
+        dec = max(s // 4, 64)
+        specs = {
+            "frames": jax.ShapeDtypeStruct(
+                (gb, s, cfg.d_model), jnp.float32,
+                sharding=NamedSharding(mesh, sanitize((dp, None, None),
+                                                      (gb, s, cfg.d_model),
+                                                      mesh))),
+            "tokens": jax.ShapeDtypeStruct(
+                (gb, dec), jnp.int32,
+                sharding=NamedSharding(mesh, sanitize((dp, None), (gb, dec),
+                                                      mesh))),
+            "labels": jax.ShapeDtypeStruct(
+                (gb, dec), jnp.int32,
+                sharding=NamedSharding(mesh, sanitize((dp, None), (gb, dec),
+                                                      mesh))),
+        }
+        return specs
+    tok = jax.ShapeDtypeStruct(
+        (gb, s), jnp.int32,
+        sharding=NamedSharding(mesh, sanitize((dp, None), (gb, s), mesh)))
+    return {"tokens": tok, "labels": tok}
+
+
+def _abstract_params(cfg: ArchConfig, mesh: Mesh) -> Tuple[Any, Any]:
+    sds = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    sh = tree_shardings(sds, mesh)
+    return _with_sharding(sds, sh), sh
+
+
+def _abstract_opt(cfg: ArchConfig, params_sds: Any, mesh: Mesh
+                  ) -> Tuple[Any, Any]:
+    init, _ = adamw(1e-4)
+    sds = jax.eval_shape(init, params_sds)
+    sh = tree_shardings(sds, mesh, zero1=True)
+    return _with_sharding(sds, sh), sh
+
+
+def _cache_spec_fn(cfg: ArchConfig, shape: Shape, mesh: Mesh):
+    """Spec rules for cache leaves (KV / SSM states), by position."""
+    dp = dp_axes(mesh)
+    gb = shape.global_batch
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        nm = names[-1] if names else ""
+        shp = leaf.shape
+        if nm in ("k", "v"):            # [L, b, S, kv, hd]
+            spec = (None, dp, None, MODEL, None)
+            s = sanitize(spec, shp, mesh)
+            if s[1] is None and len(shp) == 5:
+                # batch unshardable (long_500k b=1): context-shard S instead
+                s = sanitize((None, None, "data", MODEL, None), shp, mesh)
+            return s
+        if nm in ("cross_k", "cross_v"):
+            return sanitize((None, dp, None, MODEL, None), shp, mesh)
+        if nm == "ssm":                 # [L, b, nh, n, p]
+            return sanitize((None, dp, MODEL, None, None), shp, mesh)
+        if nm in ("conv_x",):           # [L, b, k-1, di]
+            return sanitize((None, dp, None, MODEL), shp, mesh)
+        if nm in ("conv_B", "conv_C"):
+            return sanitize((None, dp, None, None), shp, mesh)
+        return sanitize((None, dp), shp, mesh)
+
+    return assign
+
+
+def _abstract_cache(cfg: ArchConfig, shape: Shape, mesh: Mesh,
+                    params_sds: Any) -> Tuple[Any, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        fn = functools.partial(lm.init_cache, cfg, gb, s,
+                               enc_frames=min(s, 4096))
+        sds = jax.eval_shape(fn, params=params_sds)
+    else:
+        sds = jax.eval_shape(
+            functools.partial(lm.init_cache, cfg, gb, s))
+    assign = _cache_spec_fn(cfg, shape, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sds)
+    sh = [NamedSharding(mesh, assign(path, leaf)) for path, leaf in flat]
+    sh_tree = jax.tree_util.tree_unflatten(treedef, sh)
+    return _with_sharding(sds, sh_tree), sh_tree
+
+
+def abstract_inputs(cfg: ArchConfig, shape: Shape, mesh: Mesh, *,
+                    chunk: int = 128) -> Tuple[Tuple, Dict[str, Any]]:
+    """Returns (args, info) where args are fully-sharded ShapeDtypeStructs
+    for the cell's step function."""
+    params_sds, params_sh = _abstract_params(cfg, mesh)
+    if shape.kind == "train":
+        opt_sds, opt_sh = _abstract_opt(cfg, params_sds, mesh)
+        batch = _batch_specs(cfg, shape, mesh)
+        return (params_sds, opt_sds, batch), {
+            "out_shardings": (params_sh, opt_sh, None)}
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape, mesh)
+        batch.pop("labels")
+        return (params_sds, batch), {"out_shardings": None}
+    if shape.kind == "decode":
+        cache_sds, cache_sh = _abstract_cache(cfg, shape, mesh, params_sds)
+        dp = dp_axes(mesh)
+        gb = shape.global_batch
+        token = jax.ShapeDtypeStruct(
+            (gb, 1), jnp.int32,
+            sharding=NamedSharding(mesh, sanitize((dp, None), (gb, 1), mesh)))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        return (params_sds, cache_sds, token, pos), {
+            "out_shardings": (None, cache_sh)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def sp_spec_for(cfg: ArchConfig, shape: Shape, mesh: Mesh) -> Optional[P]:
+    """Sequence-parallel residual spec [b, s, d]: batch over DP, seq over
+    model — dropped per-dim when not divisible."""
+    dp = dp_axes(mesh)
+    gb, s = shape.global_batch, shape.seq_len
+    spec = sanitize((dp, MODEL, None), (gb, s, cfg.d_model), mesh)
+    return spec
+
+
+def ep_spec_for(cfg: ArchConfig, shape: Shape, mesh: Mesh) -> Optional[P]:
+    """Expert-parallel pin for the [b, e, cap, ·] MoE intermediates."""
+    if cfg.family != "moe":
+        return None
+    dp = dp_axes(mesh)
+    return sanitize((dp, MODEL, None, None),
+                    (shape.global_batch, cfg.moe_experts, 8, 8), mesh)
+
+
+def build_step(cfg: ArchConfig, kind: str, *, chunk: int = 128,
+               lr: float = 3e-4, remat: bool = True,
+               sp_spec: Optional[P] = None,
+               ep_spec: Optional[P] = None) -> Callable:
+    if kind == "train":
+        opt = adamw(lr)
+        return lm.train_step_fn(cfg, opt, chunk=chunk, remat=remat,
+                                sp_spec=sp_spec, ep_spec=ep_spec)
+    if kind == "prefill":
+        return lm.prefill_fn(cfg, chunk=chunk, sp_spec=sp_spec,
+                             ep_spec=ep_spec)
+    if kind == "decode":
+        return lm.decode_fn(cfg)
+    raise ValueError(kind)

@@ -1,0 +1,10 @@
+# Model zoo: the paper's GCN/SAGE (gcn_model.py, on top of repro.core) and
+# the five LM stack families serving the 10 assigned architectures
+# (transformer/moe/mamba2/hybrid/encdec, unified by lm.py).
+from .config import ArchConfig
+from .gcn_model import (GCNConfig, accuracy, gcn_forward, gcn_loss,
+                        init_gcn_params, pick_orders)
+from . import lm
+
+__all__ = ["ArchConfig", "GCNConfig", "accuracy", "gcn_forward", "gcn_loss",
+           "init_gcn_params", "pick_orders", "lm"]

@@ -1,0 +1,108 @@
+"""The paper's models: 2-layer GCN and GraphSAGE-mean for node classification.
+
+Built on :mod:`repro.core` — each layer's execution order (CoAg/AgCo) is
+chosen by the sequence estimator per the sampled-batch shape plan (paper
+§4.4), and the backward runs the transpose-free "Ours" dataflow unless
+``dataflow='naive'`` selects the Table-1 baseline for comparison.
+
+The loss-layer transpose: the paper transposes the loss error E^L once
+(O(b·c)) and carries backward in transposed form.  In JAX the analogue is
+structural — our custom_vjp layers consume the upstream cotangent directly
+and all contractions are expressed transpose-free; the only O(b·c) object is
+the softmax error itself, produced by the loss below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baseline import gcn_layer_baseline
+from repro.core.estimator import LayerShape, choose_order
+from repro.core.gcn import gcn_layer
+from repro.graph.coo import COO
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    feat_dim: int
+    hidden: int                     # paper §5.1: 256
+    n_classes: int
+    n_layers: int = 2               # paper trains 2-layer models
+    model: str = "gcn"              # 'gcn' | 'sage'  (SAGE adds a root path)
+    dataflow: str = "ours"          # 'ours' | 'naive' (Table-1 baseline)
+    multilabel: bool = False
+
+
+def init_gcn_params(key, cfg: GCNConfig, dtype=jnp.float32) -> Params:
+    dims = [cfg.feat_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, 2 * cfg.n_layers)
+    params: Params = {"layers": []}
+    for l in range(cfg.n_layers):
+        d_in, d_out = dims[l], dims[l + 1]
+        layer = {"w": (jax.random.normal(keys[2 * l], (d_in, d_out))
+                       * (d_in ** -0.5)).astype(dtype)}
+        if cfg.model == "sage":
+            layer["w_root"] = (jax.random.normal(keys[2 * l + 1],
+                                                 (d_in, d_out))
+                               * (d_in ** -0.5)).astype(dtype)
+        params["layers"].append(layer)
+    return params
+
+
+def pick_orders(cfg: GCNConfig, shapes: Sequence[LayerShape]) -> Tuple[str, ...]:
+    """Sequence estimator, once per (dataset, sampler, model) at launch."""
+    return tuple(choose_order(s, dataflow=cfg.dataflow).order for s in shapes)
+
+
+def gcn_forward(params: Params, layers: Sequence[COO], x: jnp.ndarray,
+                cfg: GCNConfig, orders: Sequence[str]) -> jnp.ndarray:
+    """layers[l] aggregates hop l+1 → hop l; x is the deepest hop's features.
+    Iterate deepest-first (layers reversed), matching sampler.MiniBatch."""
+    layer_fn = gcn_layer if cfg.dataflow == "ours" else gcn_layer_baseline
+    h = x
+    n = len(params["layers"])
+    for l in range(n - 1, -1, -1):
+        A = layers[l]
+        p = params["layers"][n - 1 - l]
+        activate = l != 0                      # no ReLU on the logits layer
+        out = layer_fn(A, h, p["w"], order=orders[l], activate=False)
+        if cfg.model == "sage":
+            # SAGE-mean: aggregate-neighbors path + root path
+            root = h[:A.n_dst] @ p["w_root"]
+            out = out + root
+        h = jnp.maximum(out, 0.0) if activate else out
+    return h
+
+
+def gcn_loss(params: Params, layers: Sequence[COO], x: jnp.ndarray,
+             labels: jnp.ndarray, cfg: GCNConfig, orders: Sequence[str],
+             n_valid: Optional[int] = None) -> jnp.ndarray:
+    """Softmax CE (single-label) or sigmoid BCE (multilabel: yelp/amazon).
+    ``n_valid`` masks padded seed rows."""
+    logits = gcn_forward(params, layers, x, cfg, orders)
+    b = logits.shape[0]
+    valid = (jnp.arange(b) < (n_valid if n_valid is not None else b))
+    if cfg.multilabel:
+        z = logits.astype(jnp.float32)
+        per = jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        per = per.sum(-1)
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        per = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    per = jnp.where(valid, per, 0.0)
+    return per.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+             n_valid: Optional[int] = None) -> jnp.ndarray:
+    b = logits.shape[0]
+    valid = (jnp.arange(b) < (n_valid if n_valid is not None else b))
+    hit = (jnp.argmax(logits, -1) == labels) & valid
+    return hit.sum() / jnp.maximum(valid.sum(), 1)

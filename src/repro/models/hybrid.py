@@ -1,0 +1,170 @@
+"""Zamba2-style hybrid — Mamba2 backbone + ONE shared attention block.
+
+zamba2-1.2b: 38 Mamba2 layers (d_model 2048, ssm_state 64); a single
+transformer block (32H GQA kv=32, d_ff 8192) whose weights are SHARED is
+applied every ``attn_every`` layers.  We realize the schedule as scanned
+*segments*: ``n_seg = L // attn_every`` segments of (attn_every mamba
+layers → shared block), then the remainder mamba layers — both inner and
+outer loops are ``lax.scan``s, so depth stays out of the HLO.
+
+Decode state = MambaCache over all mamba layers + a KV cache with one slot
+per shared-block *application* (same weights, different activations — each
+application has its own keys/values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .mamba2 import (MambaCache, init_mamba_layer, mamba_block,
+                     mamba_decode_block)
+from .transformer import (KVCache, _norm_init, attn_block, causal_mask,
+                          decode_attn_block, h_params, init_dense_layer,
+                          maybe_sp, rmsnorm, stack_layers, swiglu)
+
+Params = Dict[str, Any]
+
+
+def _seg_counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    seg = cfg.attn_every
+    n_seg = cfg.n_layers // seg
+    rem = cfg.n_layers - n_seg * seg
+    return seg, n_seg, rem
+
+
+def init_hybrid_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers, k_shared = jax.random.split(key, 3)
+    return {
+        "embed": _norm_init(k_emb, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "mamba_layers": stack_layers(
+            k_layers, cfg.n_layers, lambda k: init_mamba_layer(k, cfg, dtype)),
+        "shared": init_dense_layer(k_shared, cfg, dtype),   # ONE block
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _shared_block(h, p, cfg, w_eff, positions):
+    a = attn_block(rmsnorm(h, p["ln_attn"], cfg.norm_eps), p, cfg,
+                   w_eff, positions)
+    h = h + a
+    return h + swiglu(rmsnorm(h, p["ln_ffn"], cfg.norm_eps), h_params(p))
+
+
+def _split_segments(layers: Params, n_seg: int, seg: int):
+    body = jax.tree_util.tree_map(
+        lambda a: a[:n_seg * seg].reshape(n_seg, seg, *a.shape[1:]), layers)
+    rem = jax.tree_util.tree_map(lambda a: a[n_seg * seg:], layers)
+    return body, rem
+
+
+def hybrid_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
+                   chunk: int = 64,
+                   embeddings: Optional[jnp.ndarray] = None,
+                   remat: bool = False, sp_spec=None,
+                   last_logits: bool = False) -> jnp.ndarray:
+    b, s = tokens.shape[:2]
+    x = embeddings if embeddings is not None \
+        else jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)[None, :]
+    seg, n_seg, rem = _seg_counts(cfg)
+    seg_params, rem_params = _split_segments(params["mamba_layers"],
+                                             n_seg, seg)
+    shared = params["shared"]
+
+    def mamba_body(h, p):
+        return maybe_sp(h + mamba_block(h, p, cfg, chunk=chunk), sp_spec), ()
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def seg_body(h, seg_p):
+        h, _ = jax.lax.scan(mamba_body, h, seg_p)
+        return maybe_sp(_shared_block(h, shared, cfg, None, positions),
+                        sp_spec), ()
+
+    x = maybe_sp(x, sp_spec)
+    x, _ = jax.lax.scan(seg_body, x, seg_params)
+    if rem:
+        x, _ = jax.lax.scan(mamba_body, x, rem_params)
+    if last_logits:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["embed"].T,
+                      preferred_element_type=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCache:
+    mamba: MambaCache      # over all n_layers mamba blocks
+    attn: KVCache          # [n_seg, b, S, kv, hd] — one slot per application
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int, max_seq: int,
+              dtype=jnp.bfloat16):
+        _, n_seg, _ = _seg_counts(cfg)
+        return cls(mamba=MambaCache.zeros(cfg, batch),
+                   attn=KVCache.zeros(cfg, batch, max_seq, dtype,
+                                      n_layers=n_seg))
+
+
+jax.tree_util.register_pytree_node(
+    HybridCache, lambda c: ((c.mamba, c.attn), None),
+    lambda _, kv: HybridCache(mamba=kv[0], attn=kv[1]))
+
+
+def _seg_split_tree(tree, n_seg: int, seg: int):
+    body = jax.tree_util.tree_map(
+        lambda a: a[:n_seg * seg].reshape(n_seg, seg, *a.shape[1:]), tree)
+    rem = jax.tree_util.tree_map(lambda a: a[n_seg * seg:], tree)
+    return body, rem
+
+
+def hybrid_decode_step(params: Params, cache: HybridCache,
+                       token: jnp.ndarray, pos: jnp.ndarray, cfg: ArchConfig
+                       ) -> Tuple[jnp.ndarray, HybridCache]:
+    x = jnp.take(params["embed"], token, axis=0)
+    seg, n_seg, rem = _seg_counts(cfg)
+    mcache = (cache.mamba.conv_x, cache.mamba.conv_B, cache.mamba.conv_C,
+              cache.mamba.ssm)
+    seg_cache, rem_cache = _seg_split_tree(mcache, n_seg, seg)
+    seg_params, rem_params = _split_segments(params["mamba_layers"],
+                                             n_seg, seg)
+    shared = params["shared"]
+    always_global = jnp.ones((), bool)
+
+    def mamba_body(h, layer):
+        p, cx, cb, cc, ss = layer
+        out, cx, cb, cc, ss = mamba_decode_block(h, p, cfg, cx, cb, cc, ss)
+        return h + out, (cx, cb, cc, ss)
+
+    def seg_body(h, layer):
+        p_seg, (cx, cb, cc, ss), kc, vc = layer
+        h, new_state = jax.lax.scan(mamba_body, h, (p_seg, cx, cb, cc, ss))
+        xin = rmsnorm(h, shared["ln_attn"], cfg.norm_eps)
+        att, kc, vc = decode_attn_block(xin, shared, cfg, kc, vc, pos,
+                                        always_global)
+        h = h + att
+        h = h + swiglu(rmsnorm(h, shared["ln_ffn"], cfg.norm_eps),
+                       h_params(shared))
+        return h, (new_state, kc, vc)
+
+    x, (state_b, new_k, new_v) = jax.lax.scan(
+        seg_body, x, (seg_params, seg_cache, cache.attn.k, cache.attn.v))
+    if rem:
+        x, state_r = jax.lax.scan(mamba_body, x, (rem_params,) + rem_cache)
+        merged = tuple(
+            jnp.concatenate([b.reshape(-1, *b.shape[2:]), r])
+            for b, r in zip(state_b, state_r))
+    else:
+        merged = tuple(b.reshape(-1, *b.shape[2:]) for b in state_b)
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return logits, HybridCache(
+        mamba=MambaCache(conv_x=merged[0], conv_B=merged[1],
+                         conv_C=merged[2], ssm=merged[3]),
+        attn=KVCache(k=new_k, v=new_v))

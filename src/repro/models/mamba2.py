@@ -1,0 +1,290 @@
+"""Mamba2 / SSD (state-space duality) blocks — mamba2-1.3b and the zamba2
+backbone.
+
+The SSD chunked algorithm runs as a ``lax.scan`` over sequence chunks
+carrying the [b, heads, state, head_dim] SSM state — peak memory is one
+chunk's quadratic [Q, Q] block, not the sequence's (this is the same
+two-level blocking discipline as the paper's 64-node core tiles: a VMEM-
+sized working set + a carried state).  Decode is the O(1) single-token
+recurrence on the same state, which is what makes ``long_500k`` runnable
+for the SSM/hybrid archs (DESIGN §Arch-applicability).
+
+Per block:  z/x/B/C/dt projections;  causal depthwise conv (width 4) on
+x, B, C;  SSD over (x·dt, A, B, C);  gated RMSNorm by silu(z);  out_proj.
+A is scalar-per-head (Mamba2's restriction), dt softplus-positive.
+
+TP note (hardware codesign): the projections are SPLIT per component rather
+than fused like the reference CUDA kernels — a fused [d, 2di+2n+nh] matrix
+would be sliced along its SHARDED output dim (z|x|dt shard over ``model``,
+B|C replicate), and GSPMD would insert all-gathers at every slice.  Split
+projections give collective-free megatron-style TP: col-shard z/x/dt,
+replicate the small B/C, row-shard out_proj with one psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .transformer import _norm_init, maybe_sp, rmsnorm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width k): train form + streaming decode form
+# ---------------------------------------------------------------------------
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: [b, l, ch]; w: [k, ch]; causal depthwise conv + silu."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def conv_step(x_t: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x_t: [b, ch]; conv_state: [b, k-1, ch] (previous inputs, oldest first).
+    Returns (y_t [b, ch], new conv_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [b,k,ch]
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return jax.nn.silu(y + b), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray, *,
+             chunk: int = 64, h_init: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b, l, nh, p]; dt: [b, l, nh] (f32, >0); A: [nh] (f32, <0);
+    B, C: [b, l, n] (one group, broadcast over heads); D: [nh].
+
+    Returns (y [b, l, nh, p], final state [b, nh, n, p]).
+    """
+    b, l, nh, p = x.shape
+    n = B.shape[-1]
+    if l % chunk:
+        raise ValueError(f"seq len {l} not divisible by chunk {chunk}")
+    c = l // chunk
+    f32 = jnp.float32
+    xs = x.astype(f32).reshape(b, c, chunk, nh, p).transpose(1, 0, 2, 3, 4)
+    dts = dt.astype(f32).reshape(b, c, chunk, nh).transpose(1, 0, 2, 3)
+    Bs = B.astype(f32).reshape(b, c, chunk, n).transpose(1, 0, 2, 3)
+    Cs = C.astype(f32).reshape(b, c, chunk, n).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(H, inp):
+        xq, dtq, Bq, Cq = inp                  # [b,Q,nh,p] [b,Q,nh] [b,Q,n]
+        dA = dtq * A                            # [b,Q,nh]
+        cum = jnp.cumsum(dA, axis=1)
+        # --- intra-chunk (diagonal block): attention-like quadratic form
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # [b,i,j,nh]
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cq, Bq)             # [b,i,j]
+        w = scores[..., None] * Lmat * dtq[:, None, :, :]       # [b,i,j,nh]
+        y = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # --- contribution of the carried state
+        y += jnp.einsum("bin,bhnp,bih->bihp", Cq, H, jnp.exp(cum))
+        # --- state update for the next chunk
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)               # [b,Q,nh]
+        S = jnp.einsum("bjn,bjh,bjhp->bhnp", Bq, dtq * decay_out, xq)
+        H = jnp.exp(cum[:, -1, :])[:, :, None, None] * H + S
+        return H, y
+
+    H0 = h_init if h_init is not None else jnp.zeros((b, nh, n, p), f32)
+    H_final, ys = jax.lax.scan(step, H0, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, nh, p)
+    y = y + D[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), H_final
+
+
+def ssd_step(H: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+             A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray,
+             D: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence.  H: [b, nh, n, p]; x_t: [b, nh, p];
+    dt_t: [b, nh]; B_t, C_t: [b, n].  Returns (new H, y_t [b, nh, p])."""
+    f32 = jnp.float32
+    xf = x_t.astype(f32)
+    decay = jnp.exp(dt_t * A)                                  # [b, nh]
+    S = jnp.einsum("bn,bh,bhp->bhnp", B_t.astype(f32), dt_t, xf)
+    H = decay[:, :, None, None] * H + S
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(f32), H) \
+        + D[None, :, None] * xf
+    return H, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the Mamba2 block (split projections — see TP note above)
+# ---------------------------------------------------------------------------
+def init_mamba_layer(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, k = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_z": _norm_init(ks[0], (d, di), s, dtype),
+        "w_x": _norm_init(ks[1], (d, di), s, dtype),
+        "w_B": _norm_init(ks[2], (d, n), s, dtype),
+        "w_C": _norm_init(ks[3], (d, n), s, dtype),
+        "w_dt": _norm_init(ks[4], (d, nh), s, dtype),
+        "conv_wx": _norm_init(ks[5], (k, di), k ** -0.5, jnp.float32),
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_wB": _norm_init(ks[5], (k, n), k ** -0.5, jnp.float32),
+        "conv_bB": jnp.zeros((n,), jnp.float32),
+        "conv_wC": _norm_init(ks[5], (k, n), k ** -0.5, jnp.float32),
+        "conv_bC": jnp.zeros((n,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),         # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_g": jnp.zeros((di,), dtype),
+        "out_proj": _norm_init(ks[2], (di, d), di ** -0.5, dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+
+
+def mamba_block(x: jnp.ndarray, p: Params, cfg: ArchConfig, *,
+                chunk: int = 64) -> jnp.ndarray:
+    """Full-sequence Mamba2 block (pre-norm residual applied by caller)."""
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z = jnp.einsum("bld,de->ble", h, p["w_z"])
+    xin = jnp.einsum("bld,de->ble", h, p["w_x"])
+    B = jnp.einsum("bld,dn->bln", h, p["w_B"])
+    C = jnp.einsum("bld,dn->bln", h, p["w_C"])
+    dt = jnp.einsum("bld,dh->blh", h, p["w_dt"])
+    xin = causal_conv(xin.astype(jnp.float32), p["conv_wx"], p["conv_bx"])
+    B = causal_conv(B.astype(jnp.float32), p["conv_wB"], p["conv_bB"])
+    C = causal_conv(C.astype(jnp.float32), p["conv_wC"], p["conv_bC"])
+    xs = xin.reshape(*x.shape[:2], nh, hp).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_scan(xs, dt, A, B, C, p["D"], chunk=chunk)
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_g"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"])
+
+
+def mamba_decode_block(x_t: jnp.ndarray, p: Params, cfg: ArchConfig,
+                       conv_x: jnp.ndarray, conv_B: jnp.ndarray,
+                       conv_C: jnp.ndarray, ssm_state: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, ...]:
+    """x_t: [b, 1, d] one token.  Returns (out, conv_x', conv_B', conv_C',
+    ssm')."""
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rmsnorm(x_t, p["ln"], cfg.norm_eps)[:, 0]
+    z = jnp.einsum("bd,de->be", h, p["w_z"])
+    xin = jnp.einsum("bd,de->be", h, p["w_x"])
+    B = jnp.einsum("bd,dn->bn", h, p["w_B"])
+    C = jnp.einsum("bd,dn->bn", h, p["w_C"])
+    dt = jnp.einsum("bd,dh->bh", h, p["w_dt"])
+    xin, conv_x = conv_step(xin.astype(jnp.float32), conv_x,
+                            p["conv_wx"], p["conv_bx"])
+    B, conv_B = conv_step(B.astype(jnp.float32), conv_B,
+                          p["conv_wB"], p["conv_bB"])
+    C, conv_C = conv_step(C.astype(jnp.float32), conv_C,
+                          p["conv_wC"], p["conv_bC"])
+    xs = xin.reshape(-1, nh, hp).astype(x_t.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_state, y = ssd_step(ssm_state, xs, dt, A, B, C, p["D"])
+    y = y.reshape(-1, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out[:, None, :], conv_x, conv_B, conv_C, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# pure-SSM stack (mamba2-1.3b)
+# ---------------------------------------------------------------------------
+from .transformer import stack_layers  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCache:
+    conv_x: jnp.ndarray   # [L, b, k-1, di] f32
+    conv_B: jnp.ndarray   # [L, b, k-1, n] f32
+    conv_C: jnp.ndarray   # [L, b, k-1, n] f32
+    ssm: jnp.ndarray      # [L, b, nh, n, p] f32
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int,
+              n_layers: Optional[int] = None):
+        L = n_layers or cfg.n_layers
+        k1 = cfg.ssm_conv - 1
+        return cls(
+            conv_x=jnp.zeros((L, batch, k1, cfg.d_inner), jnp.float32),
+            conv_B=jnp.zeros((L, batch, k1, cfg.ssm_state), jnp.float32),
+            conv_C=jnp.zeros((L, batch, k1, cfg.ssm_state), jnp.float32),
+            ssm=jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), jnp.float32),
+        )
+
+    def slice_layers(self, lo: int, hi: int) -> "MambaCache":
+        return MambaCache(conv_x=self.conv_x[lo:hi],
+                          conv_B=self.conv_B[lo:hi],
+                          conv_C=self.conv_C[lo:hi], ssm=self.ssm[lo:hi])
+
+
+jax.tree_util.register_pytree_node(
+    MambaCache, lambda c: ((c.conv_x, c.conv_B, c.conv_C, c.ssm), None),
+    lambda _, kv: MambaCache(conv_x=kv[0], conv_B=kv[1], conv_C=kv[2],
+                             ssm=kv[3]))
+
+
+def init_ssm_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers = jax.random.split(key)
+    return {
+        "embed": _norm_init(k_emb, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "layers": stack_layers(k_layers, cfg.n_layers,
+                               lambda k: init_mamba_layer(k, cfg, dtype)),
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def ssm_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
+                chunk: int = 64,
+                embeddings: Optional[jnp.ndarray] = None,
+                remat: bool = False, sp_spec=None,
+                last_logits: bool = False) -> jnp.ndarray:
+    x = embeddings if embeddings is not None \
+        else jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, p):
+        return maybe_sp(h + mamba_block(h, p, cfg, chunk=chunk), sp_spec), ()
+
+    if remat:
+        body = jax.checkpoint(body)
+    x = maybe_sp(x, sp_spec)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    if last_logits:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["embed"].T,
+                      preferred_element_type=jnp.float32)
+
+
+def ssm_decode_step(params: Params, cache: MambaCache, token: jnp.ndarray,
+                    pos: jnp.ndarray, cfg: ArchConfig
+                    ) -> Tuple[jnp.ndarray, MambaCache]:
+    del pos  # state carries all history — O(1) decode, no position needed
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(h, layer):
+        p, cx, cb, cc, ss = layer
+        out, cx, cb, cc, ss = mamba_decode_block(h, p, cfg, cx, cb, cc, ss)
+        return h + out, (cx, cb, cc, ss)
+
+    x, (cx, cb, cc, ssm) = jax.lax.scan(
+        body, x, (params["layers"], cache.conv_x, cache.conv_B,
+                  cache.conv_C, cache.ssm))
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T,
+                        preferred_element_type=jnp.float32)
+    return logits, MambaCache(conv_x=cx, conv_B=cb, conv_C=cc, ssm=ssm)

@@ -1,0 +1,553 @@
+"""Dense decoder-only transformer — GQA + RoPE + RMSNorm + SwiGLU.
+
+Serves stablelm-3b, llama3.2-1b, yi-6b, chameleon-34b (early-fusion VLM = a
+dense LM over a fused text+VQ vocab) and gemma3-27b (per-layer local/global
+flag vector selects the sliding-window size under the same scanned params).
+
+Scale discipline (the paper's two-level blocking, applied to attention):
+  * layers run under ``lax.scan`` over stacked params — HLO size O(1) in
+    depth; optional ``jax.checkpoint`` on the body (remat) bounds the
+    backward stash to one residual per layer;
+  * optional sequence-parallel sharding constraint on the residual stream
+    (Megatron-SP): the per-layer stash shards over the ``model`` axis;
+  * attention auto-switches to a FLASH-BLOCKED path (running-max online
+    softmax over [q_block × k_block] tiles) when the KV length exceeds
+    ``FLASH_THRESHOLD`` — the 32k/500k cells never materialize an [s, s]
+    score matrix, exactly like the paper never materializes a dense
+    adjacency;
+  * the sliding window is a TRACED scalar (``w_eff``), so gemma3's 5:1
+    local:global pattern is a scanned flag, not 6 program variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+Params = Dict[str, Any]
+
+FLASH_THRESHOLD = 8192     # max KV length for the materialized-mask path
+Q_BLOCK = 512
+K_BLOCK = 1024
+
+from .config import ArchConfig  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * (1.0 + g)
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [b, s, h, hd]; positions: [b, s] (or [s])."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [b, s, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [b, s, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(s: int) -> jnp.ndarray:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return j <= i                                        # [s, s] bool
+
+
+def sliding_mask(s: int, window: int) -> jnp.ndarray:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return (j <= i) & (i - j < window)
+
+
+def _repeat_kv(k, v, h):
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    return k, v
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Materialized-score GQA attention. q: [b, sq, h, hd]; k/v:
+    [b, sk, kv, hd]; mask broadcastable to [b, h, sq, sk] (True = attend).
+
+    GROUPED einsum, no materialized K/V repeat (§Perf iteration on the
+    dense trains): ``jnp.repeat`` on the head-sharded K forced GSPMD to
+    all-gather K/V to full heads and all-reduce the score gradients
+    (~0.5 TB/device/step on gemma3); the reshape-grouped form contracts
+    per kv-head, so head-sharded attention stays device-local."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    if h % kv:
+        k, v = _repeat_kv(k, v, h)       # ragged fallback (unused archs)
+        kv = h
+    g = h // kv
+    if g == 1:                           # MHA: plain einsum, no group dim
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32)
+        logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+        if mask is not None:
+            logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    q5 = q.reshape(b, sq, kv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def flash_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 causal: bool, w_eff: Optional[jnp.ndarray] = None,
+                 q_block: int = Q_BLOCK, k_block: int = K_BLOCK
+                 ) -> jnp.ndarray:
+    """Online-softmax blocked attention (never materializes [sq, sk]).
+
+    ``w_eff``: traced sliding-window size (positions i-j >= w_eff masked);
+    pass None for dense attention.  Block masks are built from index
+    arithmetic per [q_block, k_block] tile.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    k, v = _repeat_kv(k, v, h)
+    nq = sq // q_block
+    nk = sk // k_block
+    assert nq * q_block == sq and nk * k_block == sk, (sq, sk)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qb = q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, nk, k_block, h, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, k_block, h, hd).transpose(1, 0, 3, 2, 4)
+    neg = jnp.finfo(jnp.float32).min
+
+    def q_step(_, qi):
+        qblk, iq = qi                               # [b, h, qb, hd], scalar
+        i_ids = iq * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, jk = kj
+            j_ids = jk * k_block + jnp.arange(k_block)
+            logits = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            ok = jnp.ones((q_block, k_block), bool)
+            if causal:
+                ok = ok & (j_ids[None, :] <= i_ids[:, None])
+            if w_eff is not None:
+                ok = ok & (i_ids[:, None] - j_ids[None, :] < w_eff)
+            logits = jnp.where(ok[None, None], logits, neg)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), ()
+
+        m0 = jnp.full((b, h, q_block), neg, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return (), out.astype(q.dtype)             # [b, h, qb, hd]
+
+    _, outs = jax.lax.scan(q_step, (), (qb, jnp.arange(nq)))
+    # outs: [nq, b, h, qb, hd] → [b, sq, h, hd]
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+
+
+def flash_attend_causal_pairs(q: jnp.ndarray, k: jnp.ndarray,
+                              v: jnp.ndarray, *, q_block: int = Q_BLOCK,
+                              k_block: int = K_BLOCK) -> jnp.ndarray:
+    """Causal flash that only visits the LOWER-TRIANGLE block pairs.
+
+    §Perf iteration (chameleon × prefill_32k): the rectangular flash sweep
+    computes (and moves) 2× the necessary score blocks for causal masks —
+    half are fully masked.  Enumerating the valid (q-block, kv-block) pairs
+    statically and scanning over them does exactly s²/2 block work; the
+    strictly-lower pairs also skip the mask arithmetic entirely.  The
+    running-max state lives in an output-sized carry, updated per pair.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq == sk, "pairs path is for self-attention prefill"
+    k, v = _repeat_kv(k, v, h)
+    nq, nk = sq // q_block, sk // k_block
+    assert nq * q_block == sq and nk * k_block == sk
+    r = q_block // k_block if q_block >= k_block else 1
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if j * k_block <= i * q_block + q_block - 1]
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    diag = jnp.asarray([p[1] * k_block + k_block - 1 > p[0] * q_block
+                        for p in pairs])   # needs masking (crosses diagonal)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    qb_ = q.transpose(0, 2, 1, 3)                    # [b, h, sq, hd]
+    kb_ = k.transpose(0, 2, 1, 3)
+    vb_ = v.transpose(0, 2, 1, 3)
+
+    def step(carry, pij):
+        m, l, acc = carry                            # [b,h,sq], ..., [...,hd]
+        i, j, need_mask = pij
+        qs = jax.lax.dynamic_slice_in_dim(qb_, i * q_block, q_block, 2)
+        ks = jax.lax.dynamic_slice_in_dim(kb_, j * k_block, k_block, 2)
+        vs = jax.lax.dynamic_slice_in_dim(vb_, j * k_block, k_block, 2)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qs, ks,
+                            preferred_element_type=jnp.float32) * scale
+        i_ids = i * q_block + jnp.arange(q_block)
+        j_ids = j * k_block + jnp.arange(k_block)
+        ok = jnp.where(need_mask,
+                       j_ids[None, :] <= i_ids[:, None],
+                       jnp.ones((q_block, k_block), bool))
+        logits = jnp.where(ok[None, None], logits, neg)
+        m_blk = jax.lax.dynamic_slice_in_dim(m, i * q_block, q_block, 2)
+        l_blk = jax.lax.dynamic_slice_in_dim(l, i * q_block, q_block, 2)
+        a_blk = jax.lax.dynamic_slice_in_dim(acc, i * q_block, q_block, 2)
+        m_new = jnp.maximum(m_blk, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_blk - m_new)
+        l_blk = l_blk * corr + p.sum(-1)
+        a_blk = a_blk * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vs.dtype), vs,
+            preferred_element_type=jnp.float32)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * q_block, 2)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_blk, i * q_block, 2)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_blk,
+                                                  i * q_block, 2)
+        return (m, l, acc), ()
+
+    m0 = jnp.full((b, h, sq), neg, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (pi, pj, diag))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).transpose(0, 2, 1, 3)
+
+
+def attend_auto(q, k, v, *, causal: bool,
+                w_eff: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dispatch: materialized mask for short KV, flash blocking beyond
+    (causal pair-enumeration when the mask is statically pure-causal)."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sk <= FLASH_THRESHOLD:
+        mask = None
+        if causal or w_eff is not None:
+            i = jnp.arange(sq)[:, None] + (sk - sq)
+            j = jnp.arange(sk)[None, :]
+            ok = jnp.ones((sq, sk), bool)
+            if causal:
+                ok = ok & (j <= i)
+            if w_eff is not None:
+                ok = ok & (i - j < w_eff)
+            mask = ok[None, None]
+        return attend(q, k, v, mask)
+    # NOTE (§Perf, chameleon×prefill_32k iteration 1 — REFUTED): dispatching
+    # to flash_attend_causal_pairs here halves HLO FLOPs (3.65→2.02e15) but
+    # the per-pair dynamic updates on the sharded running-state carry made
+    # GSPMD emit per-step collectives (wire 4.2e11 → 1.0e14).  The
+    # rectangular sweep stays; the pairs kernel remains available/tested.
+    return flash_attend(q, k, v, causal=causal, w_eff=w_eff)
+
+
+def gqa_project(x: jnp.ndarray, p: Params, cfg: ArchConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wq"].reshape(d, cfg.n_heads, cfg.hd))
+    k = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wk"].reshape(d, cfg.n_kv_heads, cfg.hd))
+    v = jnp.einsum("bsd,dhk->bshk",
+                   x, p["wv"].reshape(d, cfg.n_kv_heads, cfg.hd))
+    return q, k, v
+
+
+def _maybe_head_shard(t: jnp.ndarray) -> jnp.ndarray:
+    """Pin [b, s, h, hd] to batch-DP × head-TP when an ambient mesh exists
+    and the head dim divides — without this, an SP (sequence-sharded)
+    residual makes GSPMD keep q/k/v sequence-sharded with FULL heads into
+    the flash scan: 16× redundant attention per device (§Perf iteration,
+    chameleon × prefill_32k)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()   # trace-time ambient mesh
+        if mesh is None or mesh.empty or "model" not in mesh.shape:
+            return t
+    except Exception:  # noqa: BLE001
+        return t
+    if t.shape[2] % mesh.shape["model"]:
+        return t
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if dp and t.shape[0] % dp_size:
+        dp = ()
+    return jax.lax.with_sharding_constraint(
+        t, PartitionSpec(dp if dp else None, None, "model", None))
+
+
+def attn_block(x: jnp.ndarray, p: Params, cfg: ArchConfig,
+               w_eff: Optional[jnp.ndarray], positions: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill).  ``w_eff``: traced
+    sliding-window length, or None for dense causal."""
+    q, k, v = gqa_project(x, p, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if k.shape[1] > FLASH_THRESHOLD:
+        q = _maybe_head_shard(q)
+        k = _maybe_head_shard(k)
+        v = _maybe_head_shard(v)
+    o = attend_auto(q, k, v, causal=True, w_eff=w_eff)
+    return jnp.einsum("bshk,hkd->bsd",
+                      o, p["wo"].reshape(cfg.n_heads, cfg.hd, x.shape[-1]))
+
+
+def swiglu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, p["w_down"])
+
+
+def _rep_spec(sp_spec):
+    """The model-replicated companion of an SP spec (AG target)."""
+    if sp_spec is None:
+        return None
+    return PartitionSpec(sp_spec[0], *([None] * (len(sp_spec) - 1)))
+
+
+def dense_block(x, p, cfg: ArchConfig, w_eff, positions, sp_spec=None):
+    """§Perf note (EXPERIMENTS.md, gemma3 iterations): explicit Megatron-
+    style AG(activation)→TP→RS transitions per branch were MEASURED WORSE
+    here (wire 1.19→2.33 TB/dev) — at 65k tokens/device the activations
+    outweigh the FFN weight shards GSPMD chooses to gather instead.  The
+    residual constraint at block boundary + grouped GQA attention is the
+    winning placement; leave branch placement to the partitioner."""
+    h = x + attn_block(rmsnorm(x, p["ln_attn"], cfg.norm_eps), p, cfg,
+                       w_eff, positions)
+    h = h + swiglu(rmsnorm(h, p["ln_ffn"], cfg.norm_eps), h_params(p))
+    return h
+
+
+def h_params(p: Params) -> Params:
+    return {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+
+
+def maybe_sp(h: jnp.ndarray, sp_spec: Optional[PartitionSpec]) -> jnp.ndarray:
+    """Sequence-parallel residual constraint (no-op when spec is None)."""
+    if sp_spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, sp_spec)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _norm_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attn_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": _norm_init(ks[0], (d, cfg.n_heads * hd), s, dtype),
+        "wk": _norm_init(ks[1], (d, cfg.n_kv_heads * hd), s, dtype),
+        "wv": _norm_init(ks[2], (d, cfg.n_kv_heads * hd), s, dtype),
+        "wo": _norm_init(ks[3], (cfg.n_heads * hd, d),
+                         (cfg.n_heads * hd) ** -0.5, dtype),
+    }
+
+
+def init_ffn_params(key, cfg: ArchConfig, dtype=jnp.bfloat16,
+                    d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _norm_init(ks[0], (d, f), d ** -0.5, dtype),
+        "w_up": _norm_init(ks[1], (d, f), d ** -0.5, dtype),
+        "w_down": _norm_init(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def init_dense_layer(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = init_attn_params(k1, cfg, dtype)
+    p.update(init_ffn_params(k2, cfg, dtype))
+    p["ln_attn"] = jnp.zeros((cfg.d_model,), dtype)
+    p["ln_ffn"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def stack_layers(key, n: int, init_fn) -> Params:
+    """Init n layers and stack each leaf along a new leading axis."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_dense_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": _norm_init(k_emb, (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "layers": stack_layers(k_layers, cfg.n_layers,
+                               lambda k: init_dense_layer(k, cfg, dtype)),
+        "ln_final": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _norm_init(k_head, (cfg.d_model, cfg.vocab),
+                                       cfg.d_model ** -0.5, dtype)
+    return params
+
+
+def global_flags(cfg: ArchConfig) -> jnp.ndarray:
+    """[L] bool — layer uses the FULL causal mask (gemma3: every k-th)."""
+    if cfg.global_every:
+        return (jnp.arange(cfg.n_layers) + 1) % cfg.global_every == 0
+    if cfg.sliding_window:
+        return jnp.zeros(cfg.n_layers, bool)
+    return jnp.ones(cfg.n_layers, bool)
+
+
+def layer_window(cfg: ArchConfig, s: int, is_global: jnp.ndarray
+                 ) -> Optional[jnp.ndarray]:
+    """Per-layer effective window (traced): s when global, else the sliding
+    window; None when the arch has no sliding layers at all."""
+    if not cfg.sliding_window:
+        return None
+    return jnp.where(is_global, s, cfg.sliding_window).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) — scan over stacked layers
+# ---------------------------------------------------------------------------
+def dense_forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                  *, embeddings: Optional[jnp.ndarray] = None,
+                  remat: bool = False, last_logits: bool = False,
+                  sp_spec: Optional[PartitionSpec] = None) -> jnp.ndarray:
+    """tokens [b, s] → logits [b, s, vocab] f32 (or [b, 1, vocab] when
+    ``last_logits`` — the serving-prefill contract: §Perf iteration 2, the
+    full-vocab × full-sequence logits were ~75% of prefill HBM bytes)."""
+    b, s = tokens.shape[:2]
+    x = embeddings if embeddings is not None \
+        else jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)[None, :]
+    flags = global_flags(cfg)
+
+    def body(h, layer):
+        p, is_global = layer
+        w_eff = layer_window(cfg, s, is_global)
+        h = dense_block(h, p, cfg, w_eff, positions, sp_spec)
+        return maybe_sp(h, sp_spec), ()
+
+    if remat:
+        body = jax.checkpoint(body)
+    x = maybe_sp(x, sp_spec)
+    x, _ = jax.lax.scan(body, x, (params["layers"], flags))
+    if last_logits:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", x, head,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    k: jnp.ndarray   # [L, b, S, kv, hd]
+    v: jnp.ndarray   # [L, b, S, kv, hd]
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int, max_seq: int,
+              dtype=jnp.bfloat16, n_layers: Optional[int] = None):
+        shape = (n_layers or cfg.n_layers, batch, max_seq,
+                 cfg.n_kv_heads, cfg.hd)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, lambda c: ((c.k, c.v), None),
+    lambda _, kv: KVCache(k=kv[0], v=kv[1]))
+
+
+def decode_attn_block(x, p, cfg: ArchConfig, k_cache, v_cache, pos,
+                      is_global: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """One-token attention against the cache.
+
+    x: [b, 1, d]; k_cache/v_cache: [b, S, kv, hd]; pos: scalar int32 —
+    index of the new token.  Returns (out [b,1,d], new k/v caches).
+    """
+    b, _, d = x.shape
+    S = k_cache.shape[1]
+    q, k, v = gqa_project(x, p, cfg)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+    j = jnp.arange(S)
+    valid = j <= pos
+    if cfg.sliding_window:
+        local_valid = valid & (pos - j < cfg.sliding_window)
+        valid = jnp.where(is_global, valid, local_valid)
+    mask = valid[None, None, None, :]            # [1,1,1,S]
+    o = attend(q, k_cache, v_cache, mask)
+    out = jnp.einsum("bshk,hkd->bsd", o,
+                     p["wo"].reshape(cfg.n_heads, cfg.hd, d))
+    return out, k_cache, v_cache
+
+
+def dense_decode_step(params: Params, cache: KVCache, token: jnp.ndarray,
+                      pos: jnp.ndarray, cfg: ArchConfig
+                      ) -> Tuple[jnp.ndarray, KVCache]:
+    """token [b, 1] int32, pos scalar → (logits [b, 1, vocab], new cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    flags = global_flags(cfg)
+
+    def body(h, layer):
+        p, is_global, kc, vc = layer
+        xin = rmsnorm(h, p["ln_attn"], cfg.norm_eps)
+        att, kc, vc = decode_attn_block(xin, p, cfg, kc, vc, pos, is_global)
+        h = h + att
+        h = h + swiglu(rmsnorm(h, p["ln_ffn"], cfg.norm_eps), h_params(p))
+        return h, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache.k, cache.v))
+    x = rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    return logits, KVCache(k=new_k, v=new_v)

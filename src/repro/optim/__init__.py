@@ -1,0 +1,6 @@
+# Optimizers: the paper trains with SGD (Eq. 4); AdamW serves the LM archs.
+from .optimizers import (AdamWState, OptState, SGDState, adamw, apply_updates,
+                         clip_by_global_norm, cosine_schedule, sgd)
+
+__all__ = ["AdamWState", "OptState", "SGDState", "adamw", "apply_updates",
+           "clip_by_global_norm", "cosine_schedule", "sgd"]

@@ -1,0 +1,115 @@
+"""Optimizers — functional, pytree-based (no external deps).
+
+The paper's training uses plain SGD (Eq. 4: W ← W − η∇L); the LM
+architectures use AdamW with cosine decay + global-norm clipping.  States
+are pytrees so they checkpoint/reshard exactly like params.
+
+AdamW moments are kept in f32 even for bf16 params (mixed-precision
+discipline: master math in f32, storage dtype preserved on the params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Params = Any
+
+
+class SGDState(NamedTuple):
+    momentum: Any      # pytree like params (f32), or () if momentum == 0
+    step: jnp.ndarray
+
+
+class AdamWState(NamedTuple):
+    mu: Any            # first moment (f32)
+    nu: Any            # second moment (f32)
+    step: jnp.ndarray
+
+
+def _f32_like(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr: float, momentum: float = 0.0):
+    """Paper Eq. 4.  Returns (init_fn, update_fn)."""
+
+    def init(params):
+        mom = _f32_like(params) if momentum else ()
+        return SGDState(momentum=mom, step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params):
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, mom)
+        else:
+            mom = ()
+            upd = jax.tree_util.tree_map(
+                lambda g: -lr * g.astype(jnp.float32), grads)
+        return upd, SGDState(momentum=mom, step=state.step + 1)
+
+    return init, update
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    """AdamW; ``lr`` may be a schedule fn of the step."""
+
+    def init(params):
+        return AdamWState(mu=_f32_like(params), nu=_f32_like(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mu_hat = jax.tree_util.tree_map(
+            lambda m: m / (1 - b1 ** step.astype(jnp.float32)), mu)
+        nu_hat = jax.tree_util.tree_map(
+            lambda v: v / (1 - b2 ** step.astype(jnp.float32)), nu)
+        upd = jax.tree_util.tree_map(
+            lambda m, v, p: -lr_t * (m / (jnp.sqrt(v) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            mu_hat, nu_hat, params)
+        return upd, AdamWState(mu=mu, nu=nu, step=step)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,31 @@
+# NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see the real
+# 1-device CPU backend (the dry-run sets its own 512-device flag in its own
+# process; multi-device tests in test_distributed.py use subprocesses).
+import os
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, n_devices: int = 16) -> str:
+    """Run a snippet under a forced multi-device CPU backend."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout

@@ -1,0 +1,107 @@
+"""Fault-tolerance substrate: checkpoint atomicity/retention/async, exact
+pipeline resume, health-monitor policy, elastic scale plans."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (Action, CheckpointManager, HealthMonitor,
+                              scale_plan)
+from repro.data import TokenPipeline
+from repro.models.config import ArchConfig
+
+
+@pytest.fixture
+def tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "opt": {"mu": jnp.ones((5,)), "step": jnp.int32(7)}}
+
+
+def test_roundtrip_and_retention(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree_util.tree_map(lambda x: x * s, tree))
+    assert mgr.all_steps() == [2, 3]
+    restored, _ = mgr.restore(3, tree)
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.arange(12.).reshape(3, 4) * 3)
+    assert int(restored["opt"]["step"]) == 21
+
+
+def test_async_save_ordering(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    for s in range(1, 5):
+        mgr.save_async(s, tree, extra={"step": s})
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2, 3, 4]
+    _, extra = mgr.restore(mgr.latest_step(), tree)
+    assert extra["step"] == 4
+
+
+def test_crash_mid_write_leaves_no_partial(tmp_path, tree):
+    """A stale .tmp dir (simulated crash) must be invisible to restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, tree)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert mgr.latest_step() == 1          # tmp not listed
+    mgr.save(2, tree)                      # and does not block a real save
+    assert mgr.latest_step() == 2
+
+
+def test_restore_missing_leaf_errors(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": tree["w"]})
+    with pytest.raises(KeyError):
+        mgr.restore(1, tree)
+
+
+def test_pipeline_exact_resume():
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=8,
+                     n_heads=1, n_kv_heads=1, d_ff=16, vocab=100)
+    p1 = TokenPipeline(cfg, batch=2, seq=16, seed=9)
+    _ = next(p1)
+    state = p1.state()
+    want = next(p1)
+    p2 = TokenPipeline(cfg, batch=2, seq=16, seed=0)
+    p2.restore(state)
+    got = next(p2)
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+    np.testing.assert_array_equal(want["labels"], got["labels"])
+
+
+def test_health_monitor_full_lifecycle():
+    hm = HealthMonitor(4, straggler_factor=1.5, patience=2, miss_limit=2)
+    assert hm.report_step(0, [1, 1, 1, 1]) == {}
+    hm.report_step(1, [1, 1, 1, 4.0])
+    a = hm.report_step(2, [1, 1, 1, 4.0])
+    assert a == {3: Action.REBALANCE}
+    a = hm.report_step(3, [1, 1, 1, None])
+    assert a == {3: Action.CHECKPOINT_NOW}
+    a = hm.report_step(4, [1, 1, 1, None])
+    assert a == {3: Action.EVICT_AND_RESHARD}
+    assert hm.survivors() == [0, 1, 2]
+    # recovered workers are not resurrected implicitly
+    assert hm.report_step(5, [1, 1, 1, 1]) == {}
+    assert hm.n_alive() == 3
+
+
+def test_scale_plan_preserves_model_parallel_degree():
+    p = scale_plan(256, model_parallel=16)
+    assert p.mesh_shape == (16, 16)
+    p = scale_plan(255, model_parallel=16)       # lost one node
+    assert p.mesh_shape == (15, 16)
+    assert p.n_devices == 240
+    p = scale_plan(8, model_parallel=16)         # degrade below MP degree
+    assert p.mesh_shape[1] == 8
+
+
+def test_train_loop_fault_injection(tmp_path):
+    """The trainer's failure path: heartbeat miss → checkpoint → eviction."""
+    from repro.launch.train import train_lm
+    out = train_lm("llama3.2-1b", smoke=True, steps=8, batch=2, seq=32,
+                   ckpt_dir=str(tmp_path), fault_at=4, log_every=0)
+    assert out["survivors"] == [0, 1, 2]
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() is not None  # checkpoint fired on the miss

@@ -1,0 +1,95 @@
+"""Hypothesis property tests over the graph substrate's invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.coo import COO, from_edges, mean_normalize, pad_coo
+from repro.graph.convert import sort_col_major, sort_row_major, to_backward
+from repro.graph.sampler import NeighborSampler, csr_from_edges
+from repro.models.moe import capacity
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 64), st.integers(1, 64),
+       st.integers(0, 400))
+def test_spmm_equals_dense(seed, n_dst, n_src, e):
+    rng = np.random.default_rng(seed)
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     rng.standard_normal(e).astype(np.float32), n_dst, n_src)
+    x = jnp.asarray(rng.standard_normal((n_src, 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(coo.matmul(x)),
+                               np.asarray(coo.todense() @ x),
+                               rtol=1e-4, atol=1e-4)
+    e_in = jnp.asarray(rng.standard_normal((n_dst, 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(coo.rmatmul(e_in)),
+                               np.asarray(coo.todense().T @ e_in),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_graph_converter_preserves_matrix(seed):
+    """Row-major ⇄ column-major re-sorting never changes the matrix (the
+    transpose-free contract's precondition)."""
+    rng = np.random.default_rng(seed)
+    coo = from_edges(rng.integers(0, 32, 100), rng.integers(0, 48, 100),
+                     rng.standard_normal(100).astype(np.float32), 32, 48)
+    for variant in (sort_row_major(coo), sort_col_major(coo),
+                    to_backward(coo)):
+        np.testing.assert_allclose(np.asarray(variant.todense()),
+                                   np.asarray(coo.todense()),
+                                   rtol=1e-5, atol=1e-6)
+        assert variant.nnz == coo.nnz
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 50))
+def test_padding_is_noop(seed, pad):
+    rng = np.random.default_rng(seed)
+    coo = from_edges(rng.integers(0, 16, 60), rng.integers(0, 16, 60),
+                     rng.standard_normal(60).astype(np.float32), 16, 16)
+    padded = pad_coo(coo, coo.nnz + pad)
+    x = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(padded.matmul(x)),
+                               np.asarray(coo.matmul(x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(1, 12))
+def test_sampler_adjacency_invariants(seed, fanout1, fanout2):
+    """Every sampled edge references real nodes; row-normalization sums to 1
+    over non-padded rows; frontier contains the seeds (self loops)."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    src = rng.integers(0, n, 400)
+    dst = rng.integers(0, n, 400)
+    g = csr_from_edges(np.concatenate([src, dst]),
+                       np.concatenate([dst, src]), n)
+    sampler = NeighborSampler(g, fanouts=(fanout1, fanout2),
+                              pad_multiple=16, seed=seed)
+    mb = sampler.sample(rng.permutation(n)[:16],
+                        rng=np.random.default_rng(seed))
+    for coo, n_real_dst, n_real_src in zip(
+            mb.layers, mb.n_real[:-1], mb.n_real[1:]):
+        rows = np.asarray(coo.rows)
+        cols = np.asarray(coo.cols)
+        vals = np.asarray(coo.vals)
+        live = vals != 0
+        assert rows[live].max(initial=0) < coo.n_dst
+        assert cols[live].max(initial=0) < coo.n_src
+        sums = np.zeros(coo.n_dst)
+        np.add.at(sums, rows[live], vals[live])
+        np.testing.assert_allclose(sums[:n_real_dst],
+                                   np.ones(n_real_dst), rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 8192), st.integers(2, 128), st.integers(1, 8),
+       st.floats(1.0, 4.0))
+def test_capacity_monotone_and_sufficient(tokens, experts, topk, factor):
+    cap = capacity(tokens, experts, topk, factor)
+    assert cap >= 8 and cap % 8 == 0
+    assert cap * experts >= factor * tokens * topk * 0.9  # covers the load
+    assert capacity(tokens * 2, experts, topk, factor) >= cap

@@ -1,0 +1,120 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gemm, gemm_ref, spmm, spmm_ref, spmm_t_ref
+from repro.kernels.spmm import spmm as spmm_raw
+from repro.kernels.gemm import gemm as gemm_raw
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 256), (384, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("relu", [False, True])
+def test_gemm_aligned_sweep(rng, m, k, n, dtype, relu):
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    b = jnp.asarray(rng.standard_normal((n,)), dtype)
+    out = gemm_raw(x, w, b, relu=relu, interpret=True)
+    ref = gemm_ref(x, w, b, relu=relu)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,k,n", [(100, 70, 33), (1, 130, 5), (127, 1, 129)])
+def test_gemm_ragged_padding_wrapper(rng, m, k, n):
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out = gemm(x, w, relu=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gemm_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_dst,n_src,d,e", [(64, 64, 128, 512),
+                                             (64, 96, 256, 1024),
+                                             (128, 64, 128, 256),
+                                             (8, 200, 128, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_sweep(rng, n_dst, n_src, d, e, dtype):
+    rows = jnp.asarray(rng.integers(0, n_dst, e), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n_src, e), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal(e), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n_src, d)), dtype)
+    out = spmm(rows, cols, vals, x, n_dst)
+    ref = spmm_ref(rows, cols, vals, x, n_dst)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_spmm_padding_edges_are_noops(rng):
+    """val == 0 ⇒ edge is a no-op, regardless of its indices (the padding
+    contract every layer relies on)."""
+    n_dst, n_src, d = 64, 64, 128
+    rows = jnp.asarray(rng.integers(0, n_dst, 300), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n_src, 300), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal(300), jnp.float32).at[200:].set(0)
+    x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+    full = spmm(rows, cols, vals, x, n_dst)
+    trimmed = spmm(rows[:200], cols[:200], vals[:200], x, n_dst)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(trimmed),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_matches_transpose_oracle(rng):
+    """spmm on the swapped index roles == Aᵀe oracle (Graph Converter)."""
+    n_dst, n_src, d, e = 64, 80, 128, 400
+    rows = jnp.asarray(rng.integers(0, n_dst, e), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n_src, e), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal(e), jnp.float32)
+    err = jnp.asarray(rng.standard_normal((n_dst, d)), jnp.float32)
+    out = spmm(cols, rows, vals, err, n_src)      # roles swapped
+    ref = spmm_t_ref(rows, cols, vals, err, n_src)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_block_shape_invariance(rng):
+    """Different VMEM tilings must give the same result (accumulation-order
+    tolerance only)."""
+    x = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    a = gemm_raw(x, w, bm=128, bn=128, bk=128, interpret=True)
+    b = gemm_raw(x, w, bm=256, bn=256, bk=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bh,s,hd,qb,kb", [(4, 1024, 64, 128, 256),
+                                           (2, 512, 128, 256, 128),
+                                           (1, 256, 32, 128, 128)])
+def test_flash_mha_sweep(rng, causal, bh, s, hd, qb, kb):
+    from repro.kernels.flash import flash_mha
+    from repro.kernels.ref import mha_ref
+    q = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, hd)), jnp.float32)
+    out = flash_mha(q, k, v, causal=causal, q_block=qb, k_block=kb,
+                    interpret=True)
+    ref = mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_mha_bf16(rng):
+    from repro.kernels.flash import flash_mha
+    from repro.kernels.ref import mha_ref
+    q = jnp.asarray(rng.standard_normal((2, 512, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((2, 512, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((2, 512, 64)), jnp.bfloat16)
+    out = flash_mha(q, k, v, q_block=128, k_block=128, interpret=True)
+    ref = mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,153 @@
+"""Per-arch smoke tests (reduced configs, CPU) + decode/prefill consistency.
+
+Each assigned architecture instantiates its SMOKE config, runs one forward
+and one train step asserting output shapes + finiteness, and (for the
+decoder archs) checks one-token decode against the teacher-forced forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke
+from repro.models import lm
+from repro.models.transformer import (FLASH_THRESHOLD, attend, flash_attend)
+from repro.optim import adamw
+
+
+def _batch(cfg, rng, b=2, s=16):
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                 jnp.int32),
+           "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                 jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(rng, arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    batch = _batch(cfg, rng)
+    logits, aux = lm.forward(params, batch, cfg, chunk=8)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    opt = adamw(1e-3)
+    step = jax.jit(lm.train_step_fn(cfg, opt, chunk=8, remat=False))
+    params2, opt_state, metrics = step(params, opt[0](params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b2))
+        for a, b2 in zip(jax.tree_util.tree_leaves(params),
+                         jax.tree_util.tree_leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "gemma3-27b",
+                                  "mamba2-1.3b", "zamba2-1.2b",
+                                  "moonshot-v1-16b-a3b"])
+def test_decode_matches_prefill(rng, arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    b, s = 2, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    if cfg.family == "moe":
+        from repro.models.moe import moe_forward
+        logits, _ = moe_forward(params, tokens, cfg, capacity_factor=8.0)
+    else:
+        logits, _ = lm.forward(params, {"tokens": tokens}, cfg, chunk=8)
+    cache = lm.init_cache(cfg, b, s, dtype=jnp.float32)
+    decode = lm.decode_fn(cfg)
+    outs = []
+    for t in range(s):
+        if cfg.family == "moe":
+            from repro.models.moe import moe_decode_step
+            lg, cache = moe_decode_step(params, cache, tokens[:, t:t + 1],
+                                        jnp.int32(t), cfg,
+                                        capacity_factor=8.0)
+        else:
+            lg, cache = decode(params, cache, tokens[:, t:t + 1],
+                               jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_encdec_decode_matches_teacher_forcing(rng):
+    cfg = get_smoke("seamless-m4t-medium")
+    params = lm.init_params(jax.random.PRNGKey(2), cfg, dtype=jnp.float32)
+    from repro.models.encdec import (encode, encdec_decode_step,
+                                     encdec_forward, prefill_cross)
+    b, s_enc, s_dec = 2, 12, 10
+    frames = jnp.asarray(rng.standard_normal((b, s_enc, cfg.d_model)),
+                         jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s_dec)), jnp.int32)
+    logits = encdec_forward(params, frames, tokens, cfg)
+    cache = prefill_cross(params, encode(params, frames, cfg), cfg, b, s_dec,
+                          dtype=jnp.float32)
+    outs = []
+    for t in range(s_dec):
+        lg, cache = encdec_decode_step(params, cache, tokens[:, t:t + 1],
+                                       jnp.int32(t), cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(logits), rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_matches_dense(rng):
+    """The online-softmax blocked path == materialized attention."""
+    b, s, h, hd, kv = 2, 2048, 4, 32, 2
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    for window in (None, 384):
+        mask = (j <= i)
+        if window:
+            mask = mask & (i - j < window)
+        ref = attend(q, k, v, mask[None, None])
+        w_eff = jnp.int32(window) if window else None
+        out = flash_attend(q, k, v, causal=True, w_eff=w_eff,
+                           q_block=256, k_block=512)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_cross_noncausal(rng):
+    b, sq, sk, h, hd = 1, 512, 1024, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sk, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sk, h, hd)), jnp.float32)
+    ref = attend(q, k, v, None)
+    out = flash_attend(q, k, v, causal=False, q_block=256, k_block=256)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drop_fraction(rng):
+    """At the default capacity factor the dropped-token fraction stays small
+    on near-uniform routing."""
+    from repro.models.moe import capacity
+    s, e, k = 4096, 64, 6
+    cap = capacity(s, e, k, 1.25)
+    eidx = rng.integers(0, e, (s, k))
+    counts = np.bincount(eidx.reshape(-1), minlength=e)
+    dropped = np.maximum(counts - cap, 0).sum()
+    assert dropped / (s * k) < 0.02
+
+
+def test_param_counts_match_published_sizes():
+    from repro.configs import get_config
+    expected = {"zamba2-1.2b": 1.2e9, "gemma3-27b": 27e9, "yi-6b": 6e9,
+                "llama3.2-1b": 1.2e9, "mamba2-1.3b": 1.3e9,
+                "chameleon-34b": 34e9}
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n <= got <= 1.35 * n, (arch, got)

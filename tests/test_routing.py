@@ -1,0 +1,92 @@
+"""Algorithm 1 (parallel multicast routing) — §4.3 invariants + Fig. 9."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import (aggregate_bandwidth_model, fuse_experiment,
+                                make_fuse_wave, popcount, route_messages,
+                                validate_routing, xor_path_set)
+from repro.core.schedule import (compare_schedules, dimension_ordered_table,
+                                 round_bytes)
+
+
+def test_xor_path_set_is_single_bit_flips():
+    for cur in range(16):
+        for dst in range(16):
+            ps = xor_path_set(cur, dst, 4)
+            assert len(ps) == bin(cur ^ dst).count("1")
+            for nxt in ps:
+                diff = cur ^ nxt
+                assert diff and (diff & (diff - 1)) == 0
+
+
+def test_single_wave_all_constraints():
+    rng = np.random.default_rng(0)
+    src, dst = make_fuse_wave(4, rng)
+    res = route_messages(src, dst, seed=1)
+    validate_routing(res, src, dst)
+    # lower bound: longest shortest path
+    assert res.cycles >= popcount(src ^ dst).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_routing_invariants_random_waves(seed, n_groups):
+    """Property: ANY wave of ≤4 msgs/source routes deadlock-free with all
+    §4.3.2 constraints held and every message delivered."""
+    rng = np.random.default_rng(seed)
+    src, dst = make_fuse_wave(n_groups, rng)
+    res = route_messages(src, dst, seed=seed)
+    validate_routing(res, src, dst)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_routing_arbitrary_destinations(seed):
+    """Even adversarial (non-permutation) destinations route, as long as the
+    per-sender limit holds (4 msgs per source = the paper's start rule)."""
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(16), 4)           # 4 msgs per sender
+    dst = rng.integers(0, 16, 64)
+    res = route_messages(src, dst, seed=seed, max_cycles=512)
+    validate_routing(res, src, dst)
+
+
+def test_fig9_fuse_scaling():
+    """Fig. 9: Fuse1→4 average receive cycles grow ≈ +1 cycle per group
+    (paper: 'adds only one cycle as messaging increases by one group')."""
+    stats = [fuse_experiment(g, n_trials=60, seed=0) for g in (1, 2, 3, 4)]
+    avgs = [s["avg_cycles"] for s in stats]
+    assert avgs == sorted(avgs)
+    # paper's avg period ≈ 20.13 ns @ 250 MHz ⇒ ~5.03 cycles for Fuse4
+    assert 4.0 <= avgs[-1] <= 6.5
+    for lo, hi in zip(avgs, avgs[1:]):
+        assert hi - lo <= 1.5                   # ≈ +1 cycle per group
+    # fastest possible full wave = 4 cycles (paper §4.3.3)
+    assert min(s["avg_cycles"] for s in stats) >= 3.0
+
+
+def test_bandwidth_model_matches_paper_magnitude():
+    """§5.2: 64B lines, 16 cores, fan-in 4, 16× compression at ~20 ns
+    average wave period ⇒ TB/s-scale effective aggregate bandwidth."""
+    out = aggregate_bandwidth_model(20.13)
+    assert 2.5e12 < out["effective_Bps"] < 3.5e12      # ≈ 2.96 TB/s
+    assert 180e9 < out["raw_Bps"] < 210e9              # ≈ 189.4 GB/s raw
+
+
+def test_dimension_ordered_static_schedule():
+    rng = np.random.default_rng(0)
+    src, dst = make_fuse_wave(4, rng)
+    table = dimension_ordered_table(src, dst)
+    assert table.shape == (4, 64)
+    assert np.all(table[-1] == dst)
+    cmp = compare_schedules(src, dst, seed=0)
+    assert cmp["static_cycles"] == 4
+    assert cmp["adaptive_cycles"] >= cmp["lower_bound"]
+
+
+def test_round_bytes_accounting():
+    src = np.array([0, 1, 2])
+    dst = np.array([15, 1, 3])       # steps: 4, 0, 1
+    rb = round_bytes(src, dst, msg_bytes=10)
+    assert rb.sum() == (4 + 0 + 1) * 10
