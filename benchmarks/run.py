@@ -1,36 +1,108 @@
 """Benchmark driver — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: toy sizes + JSON
+
+``--smoke`` is the CI arm: it exercises the pipelined-aggregation overlap
+path at toy sizes (4 simulated cores), sanity-runs the block-layout SpMM
+kernel against its oracle, and writes ``BENCH_smoke.json`` +
+``BENCH_overlap.json`` for the workflow to upload as artifacts.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
 
+def smoke() -> int:
+    """Toy-size benchmark smoke: overlap arm + kernel sanity, JSON out."""
+    t_start = time.time()
+    rec = {"mode": "smoke"}
+
+    print(f"\n{'=' * 72}\npipelined aggregation — overlap arm (toy)\n"
+          f"{'=' * 72}")
+    from benchmarks.epoch_time import run_overlap_arm
+    rec["overlap"] = run_overlap_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\nblock-layout SpMM kernel vs oracle (interpret)\n"
+          f"{'=' * 72}")
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.blockmsg import dst_tiles
+    from repro.graph.coo import from_edges
+    from repro.graph.partition import block_partition
+    from repro.kernels.ops import spmm_block
+    from repro.kernels.ref import spmm_ref
+
+    rng = np.random.default_rng(0)
+    n_dst, n_src, d, e = 64, 64, 32, 600
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     rng.standard_normal(e).astype(np.float32), n_dst, n_src)
+    tiles = dst_tiles(block_partition(coo, 4))
+    x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+    t0 = time.time()
+    y = spmm_block(jnp.asarray(tiles.rows), jnp.asarray(tiles.cols),
+                   jnp.asarray(tiles.vals), x, tiles.dst_per_core)
+    err = float(np.abs(np.asarray(y)
+                       - np.asarray(spmm_ref(coo.rows, coo.cols, coo.vals,
+                                             x, n_dst))).max())
+    rec["spmm_block"] = {"max_abs_err": err, "s": time.time() - t0,
+                        "n_dst": n_dst, "n_src": n_src, "d": d, "e": e}
+    print(f"max |err| = {err:.2e}  ({rec['spmm_block']['s']:.1f}s)")
+
+    rec["total_s"] = time.time() - t_start
+    with open("BENCH_smoke.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"\nwrote BENCH_smoke.json ({rec['total_s']:.1f}s total)")
+    ok = err < 1e-4 and rec["overlap"]["loss_match"]
+    print("SMOKE", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI arm: toy sizes, writes BENCH_*.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+
     sections = [
         ("Fig. 9 — routing cycles + §5.2 bandwidth", "routing_cycles"),
         ("Table 1 — dataflow complexities (Eqs. 5-8) + measured contracts",
          "dataflow_table1"),
         ("Table 2 — epoch time, ours vs naive dataflow", "epoch_time"),
+        ("Overlap — serial vs pipelined aggregation", "epoch_time:overlap"),
         ("Fig. 1 — access locality / NUMA-vs-UMA bytes", "hbm_access"),
         ("Fig. 10/11 — compute:comm ratio + utilization", "ctc_ratio"),
         ("§Roofline — dry-run three-term table", "roofline"),
         ("Scaling — per-device wire bytes vs core count", "scaling"),
     ]
-    for title, mod in sections:
-        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
-        t0 = time.time()
-        try:
-            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
-            m.main()
-            print(f"[{mod}: {time.time() - t0:.1f}s]")
-        except FileNotFoundError as e:
-            print(f"[{mod}: skipped — {e}; run the dry-run first]")
-        except Exception as e:  # noqa: BLE001
-            print(f"[{mod}: FAILED — {e!r}]")
-            raise
+    argv_saved = sys.argv
+    sys.argv = [argv_saved[0]]    # section mains parse their own argv
+    try:
+        for title, mod in sections:
+            print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+            t0 = time.time()
+            mod, _, variant = mod.partition(":")
+            try:
+                m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+                if variant == "overlap":
+                    m.run_overlap_arm(8, smoke=args.fast)
+                else:
+                    m.main()
+                print(f"[{mod}: {time.time() - t0:.1f}s]")
+            except FileNotFoundError as e:
+                print(f"[{mod}: skipped — {e}; run the dry-run first]")
+            except Exception as e:  # noqa: BLE001
+                print(f"[{mod}: FAILED — {e!r}]")
+                raise
+    finally:
+        sys.argv = argv_saved
 
 
 if __name__ == "__main__":

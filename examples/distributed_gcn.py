@@ -14,6 +14,7 @@ if "xla_force_host_platform_device_count" not in \
                                + " --xla_force_host_platform_device_count=16")
 
 import jax                      # noqa: E402
+from repro.compat import set_mesh  # noqa: E402
 import numpy as np              # noqa: E402
 
 from repro.distributed.gcn_train import (init_params, make_train_step,  # noqa: E402
@@ -32,7 +33,7 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0),
                          [(64, 64), (64, ds.stats.n_classes)])
     step = None
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(20):
             seeds = rng.permutation(ds.graph.n_nodes)[:64]
             mb = sampler.sample(seeds, nnz_pad=sampler.static_nnz(64),

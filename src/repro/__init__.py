@@ -1,0 +1,5 @@
+"""Reproduction of the HBM-FPGA message-passing GCN training architecture
+on JAX/Pallas — see ROADMAP.md for the north star and PAPER.md for the
+source paper."""
+
+__version__ = "0.1.0"

@@ -20,7 +20,7 @@ executes, plus the compression statistics behind the 2.96 TB/s §5.2 claim.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,6 +66,93 @@ def compress_block(local_rows: np.ndarray, local_cols: np.ndarray,
         agg_slots=uniq.astype(np.int32),
         seg_ids=seg.astype(np.int32), nbr_slots=c, weights=v,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTiles:
+    """Dense padded per-destination-block COO tiles of ONE sender core.
+
+    This is the Block-Message layout in array form: tile *i* holds the edges
+    whose destinations live on core *i* (block (i, src_core) of the grid),
+    with **block-local row offsets** (the B values of Fig. 7) — exactly what
+    the block-layout SpMM kernel consumes, so aggregation never rebuilds a
+    global one-hot over ``n_dst`` rows.  Padding entries carry ``val == 0``.
+    """
+
+    rows: np.ndarray        # [B, eb] int32 — dst slot WITHIN the dst block
+    cols: np.ndarray        # [B, eb] int32 — local src slot (D values)
+    vals: np.ndarray        # [B, eb] float32 (0 = padding)
+    dst_per_core: int
+    src_per_core: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def e_per_block(self) -> int:
+        return int(self.rows.shape[1])
+
+
+def _pack_tiles(stripes, eb_max: Optional[int], dpc: int, spc: int,
+                what: str) -> BlockTiles:
+    """Pad per-tile (rows, cols, vals) triples (None = empty) to a common
+    static length — the one packing loop both tile layouts share."""
+    if eb_max is None:
+        eb_max = max((len(t[0]) for t in stripes if t is not None),
+                     default=1)
+        eb_max = max(int(eb_max), 1)
+    n = len(stripes)
+    rows = np.zeros((n, eb_max), np.int32)
+    cols = np.zeros((n, eb_max), np.int32)
+    vals = np.zeros((n, eb_max), np.float32)
+    for i, t in enumerate(stripes):
+        if t is None:
+            continue
+        lr, lc, v = t
+        if len(lr) > eb_max:
+            raise ValueError(
+                f"{what} {i} has {len(lr)} edges > eb_max={eb_max}")
+        rows[i, :len(lr)] = lr
+        cols[i, :len(lc)] = lc
+        vals[i, :len(v)] = v
+    return BlockTiles(rows=rows, cols=cols, vals=vals,
+                      dst_per_core=dpc, src_per_core=spc)
+
+
+def block_tiles(blocked: BlockedCOO, src_core: int,
+                eb_max: Optional[int] = None) -> BlockTiles:
+    """Column ``src_core`` of the block grid as dense padded tiles.
+
+    Edges keep :func:`repro.graph.partition.block_partition`'s (row, col)
+    sort order inside every tile, so per-tile segment sums add in the same
+    per-element order as a flat global segment sum — the blocked and flat
+    aggregation paths stay bit-identical in fp32.
+    """
+    P = blocked.n_cores
+    per_block = [blocked.block_edges.get((i, src_core)) for i in range(P)]
+    return _pack_tiles(per_block, eb_max, blocked.dst_per_core,
+                       blocked.src_per_core, f"block (·, {src_core}): tile")
+
+
+def dst_tiles(blocked: BlockedCOO, eb_max: Optional[int] = None
+              ) -> BlockTiles:
+    """Receiver-side tiles for the single-device block-layout SpMM.
+
+    Tile *i* holds ALL edges whose destinations live in row-stripe *i* of
+    the block grid — block-local row offsets, GLOBAL column ids (the dense
+    feature matrix is one address space on a single device).  This is the
+    layout :func:`repro.core.gcn.gcn_layer_blocked` feeds the kernel; the
+    distributed path uses the sender-side :func:`block_tiles` instead.
+    """
+    P = blocked.n_cores
+    spc = blocked.src_per_core
+    by_stripe: List[list] = [[] for _ in range(P)]
+    for (bi, j), (lr, lc, v) in sorted(blocked.block_edges.items()):
+        by_stripe[bi].append((lr, lc.astype(np.int64) + j * spc, v))
+    stripes = [tuple(np.concatenate(a) for a in zip(*parts)) if parts
+               else None for parts in by_stripe]
+    return _pack_tiles(stripes, eb_max, blocked.dst_per_core, spc, "stripe")
 
 
 @dataclasses.dataclass(frozen=True)

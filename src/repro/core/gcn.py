@@ -25,7 +25,6 @@ The measurable contracts (tests + benchmarks assert these):
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +115,96 @@ def gcn_layer(A: COO, x: jnp.ndarray, w: jnp.ndarray, *,
         raise ValueError(f"x rows {x.shape[0]} != A.n_src {A.n_src}")
     return _gcn_layer(A.n_dst, A.n_src, order, activate,
                       A.rows, A.cols, A.vals, x, w)
+
+
+# ---------------------------------------------------------------------------
+# Block-layout variant: aggregation through the Block-Message tile kernel.
+# ---------------------------------------------------------------------------
+def _spmm_blocked(rows_b, cols_b, vals_b, x, dpc):
+    """y = A @ x via the block-layout kernel: per-destination-block tiles
+    with block-local row offsets (no global one-hot gathers)."""
+    from repro.kernels.ops import spmm_block
+    return spmm_block(rows_b, cols_b, vals_b, x, dpc)
+
+
+def _spmm_t_blocked(rows_b, cols_b, vals_b, e, n_src):
+    """y = Aᵀ @ e walking the SAME tiles column-major: tile b's error rows
+    are the contiguous slab e[b·dpc : (b+1)·dpc] — the Graph Converter's
+    backward order, no Aᵀ table and no transposed error copy.  Block-local
+    offsets are globalized with a trace-time iota and all tiles scatter
+    through ONE segment-sum (a vmapped per-tile segment-sum lowers to a
+    serialized scatter loop on CPU)."""
+    n_blocks = rows_b.shape[0]
+    dpc = e.shape[0] // n_blocks
+    rows_g = (rows_b
+              + (jnp.arange(n_blocks, dtype=rows_b.dtype) * dpc)[:, None])
+    gathered = e[rows_g.reshape(-1)] * vals_b.reshape(-1)[:, None]
+    return jax.ops.segment_sum(gathered, cols_b.reshape(-1),
+                               num_segments=n_src)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _gcn_layer_block(dpc: int, n_src: int, order: Order, activate: bool,
+                     rows_b, cols_b, vals_b, x, w):
+    if order == "coag":
+        z = _spmm_blocked(rows_b, cols_b, vals_b, x @ w, dpc)
+    elif order == "agco":
+        z = _spmm_blocked(rows_b, cols_b, vals_b, x, dpc) @ w
+    else:
+        raise ValueError(order)
+    return jnp.maximum(z, 0.0) if activate else z
+
+
+def _gcn_layer_block_fwd(dpc, n_src, order, activate, rows_b, cols_b,
+                         vals_b, x, w):
+    if order == "coag":
+        z = _spmm_blocked(rows_b, cols_b, vals_b, x @ w, dpc)
+        saved_feat = x
+    else:
+        ax = _spmm_blocked(rows_b, cols_b, vals_b, x, dpc)
+        z = ax @ w
+        saved_feat = ax
+    y = jnp.maximum(z, 0.0) if activate else z
+    mask = (z > 0) if activate else None
+    return y, (rows_b, cols_b, vals_b, saved_feat, w, mask)
+
+
+def _gcn_layer_block_bwd(dpc, n_src, order, activate, res, ct):
+    rows_b, cols_b, vals_b, saved_feat, w, mask = res
+    dz = jnp.where(mask, ct, 0.0) if activate else ct
+    if order == "coag":
+        s = _spmm_t_blocked(rows_b, cols_b, vals_b, dz, n_src)
+        dx = jnp.einsum("nh,dh->nd", s, w)
+        dw = jnp.einsum("nd,nh->dh", saved_feat, s)
+    else:
+        dw = jnp.einsum("nd,nh->dh", saved_feat, dz)
+        dax = jnp.einsum("nh,dh->nd", dz, w)
+        dx = _spmm_t_blocked(rows_b, cols_b, vals_b, dax, n_src)
+    dvals = jnp.zeros_like(vals_b)
+    return (_int_zero_ct(rows_b), _int_zero_ct(cols_b), dvals, dx, dw)
+
+
+_gcn_layer_block.defvjp(_gcn_layer_block_fwd, _gcn_layer_block_bwd)
+
+
+def gcn_layer_blocked(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
+                      order: Order = "coag", activate: bool = True
+                      ) -> jnp.ndarray:
+    """GCN layer whose aggregation consumes Block-Message tiles directly.
+
+    ``tiles`` is :func:`repro.core.blockmsg.dst_tiles` output (receiver-side
+    layout: block-local rows, global cols).  Forward runs the block-layout
+    Pallas SpMM (:func:`repro.kernels.ops.spmm_block`); backward walks the
+    same tiles column-major — transpose-free, like :func:`gcn_layer`, but
+    with per-block row offsets instead of global one-hot gathers.
+    """
+    if x.shape[0] < int(np.max(tiles.cols)) + 1:
+        raise ValueError(f"x rows {x.shape[0]} too few for tile col ids")
+    rows_b = jnp.asarray(tiles.rows, jnp.int32)
+    cols_b = jnp.asarray(tiles.cols, jnp.int32)
+    vals_b = jnp.asarray(tiles.vals, jnp.float32)
+    return _gcn_layer_block(int(tiles.dst_per_core), int(x.shape[0]),
+                            order, activate, rows_b, cols_b, vals_b, x, w)
 
 
 def residual_bytes(order: Order, n_dst: int, n_src: int, d: int, h: int,

@@ -34,7 +34,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .routing import RoutingResult, popcount, route_messages
+from .routing import popcount, route_messages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +107,41 @@ def compare_schedules(src: Sequence[int], dst: Sequence[int], *, ndim: int = 4,
         "lower_bound": float(shortest),
         "adaptive_stalls": float(np.sum(adaptive.table == -1)),
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureWave:
+    """One feature-dimension chunk of the pipelined fold (half-open slice)."""
+
+    start: int
+    size: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+
+def feature_waves(d: int, n_chunks: int) -> Tuple["FeatureWave", ...]:
+    """Chunk a feature dimension into the double-buffer wave schedule.
+
+    The pipelined aggregation issues chunk *k*'s ``ppermute`` before the
+    local work of chunk *k+1*, so with ≥2 waves every wire transfer has
+    compute to hide behind — the TPU lowering of the paper's ping-pong
+    Block-Message buffers (§4.2).  Chunks are contiguous, cover ``[0, d)``
+    exactly, and differ in size by at most one column, so the math is
+    bit-identical to the unchunked schedule (same per-element add order).
+    """
+    if d <= 0:
+        raise ValueError(f"feature dim must be positive, got {d}")
+    n_chunks = max(1, min(int(n_chunks), d))
+    base, rem = divmod(d, n_chunks)
+    waves = []
+    start = 0
+    for k in range(n_chunks):
+        size = base + (1 if k < rem else 0)
+        waves.append(FeatureWave(start=start, size=size))
+        start += size
+    return tuple(waves)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,12 +36,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blockmsg import block_tiles
+from repro.core.schedule import feature_waves
+from repro.distributed.overlap import double_buffered_exchange
 from repro.graph.coo import COO
 from repro.graph.partition import block_partition
 
@@ -91,6 +94,64 @@ def hypercube_allgather(x: jnp.ndarray, axis_name: str, ndim: int
         hi = jnp.concatenate([other, buf], axis=0)
         buf = jnp.where(my_bit == 0, lo, hi)
     return buf
+
+
+def hypercube_reduce_scatter_pipelined(partial: jnp.ndarray, axis_name: str,
+                                       ndim: int, n_chunks: int = 2
+                                       ) -> jnp.ndarray:
+    """Double-buffered fold — bit-identical to the serial reduce-scatter.
+
+    The feature dimension is split into ``n_chunks`` waves
+    (:func:`repro.core.schedule.feature_waves`); within every round all
+    waves' ``ppermute`` sends are issued before any wave's local add
+    consumes a received half, so the wire transfer of wave *k+1* overlaps
+    the MAC work of wave *k* — the paper's ping-pong Block-Message buffers
+    (§4.2), expressed as dataflow for XLA's latency-hiding scheduler.
+    Per-element add order matches :func:`hypercube_reduce_scatter` exactly,
+    so fp32 results are bit-equal.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    waves = feature_waves(partial.shape[-1], n_chunks)
+    bufs = [jax.lax.slice_in_dim(partial, w.start, w.stop, axis=-1)
+            for w in waves]
+    for b in reversed(range(ndim)):
+        half = bufs[0].shape[0] // 2
+        my_bit = (idx >> b) & 1
+        perm = _dim_perm(n_cores, b)
+
+        def split(buf, my_bit=my_bit, half=half):
+            mine = jax.lax.dynamic_slice_in_dim(buf, my_bit * half, half, 0)
+            send = jax.lax.dynamic_slice_in_dim(buf, (1 - my_bit) * half,
+                                                half, 0)
+            return mine, send
+
+        bufs = double_buffered_exchange(
+            bufs, split,
+            lambda s, perm=perm: jax.lax.ppermute(s, axis_name, perm))
+    return jnp.concatenate([b[0] for b in bufs], axis=-1)
+
+
+def hypercube_allgather_pipelined(x: jnp.ndarray, axis_name: str, ndim: int,
+                                  n_chunks: int = 2) -> jnp.ndarray:
+    """Mirror of the pipelined fold (the backward pass's gather): the same
+    feature waves, each wave one ``all_gather`` in core order.
+
+    All waves' collectives are issued independently before any result is
+    consumed, so wave *k*'s wire time hides under wave *k+1*'s — and each
+    wave lowers to XLA's native all-gather, which schedules the
+    dimension-ordered doubling itself instead of paying ``ndim`` rounds of
+    hand-rolled concatenate+select copies (the gather moves bytes only, so
+    the result is bit-identical to :func:`hypercube_allgather`).
+    """
+    del ndim  # the native collective derives the schedule from the mesh
+    waves = feature_waves(x.shape[-1], n_chunks)
+    if len(waves) == 1:
+        return jax.lax.all_gather(x, axis_name)
+    gathered = [jax.lax.all_gather(
+        jax.lax.slice_in_dim(x, w.start, w.stop, axis=-1), axis_name)
+        for w in waves]
+    return jnp.concatenate(gathered, axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +271,206 @@ def hypercube_aggregate(axis_name: str, ndim: int, n_dst: int,
     """
     return _hypercube_aggregate(axis_name, ndim, n_dst, rows_g, cols_l,
                                 vals, x_local)
+
+
+# ---------------------------------------------------------------------------
+# Block-tile edge shards + the fused, double-buffered aggregate.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockEdgeShards:
+    """Sender-side edges in the Block-Message tile layout, stacked per core.
+
+    Device *j* (= source core *j*) holds ``rows_local[j]``: [B, eb] int32
+    block-LOCAL destination slots (Fig. 7's B values) for each of the B
+    destination-core tiles, plus matching ``cols_local`` (D values, local
+    source slots) and ``vals``.  This is :func:`repro.core.blockmsg.block_tiles`
+    per sender, padded to a common static tile size — the layout both the
+    block-layout SpMM kernel and the pipelined aggregate consume directly,
+    with no global row ids and no one-hot over ``n_dst``.
+    """
+
+    rows_local: np.ndarray   # [P, B, eb] int32 — dst slot within dst block
+    cols_local: np.ndarray   # [P, B, eb] int32 — source slot on the sender
+    vals: np.ndarray         # [P, B, eb] f32   — Ã weights (0 = padding)
+    n_dst: int
+    n_src: int
+    n_cores: int
+
+    @property
+    def dst_per_core(self) -> int:
+        return self.n_dst // self.n_cores
+
+    @property
+    def src_per_core(self) -> int:
+        return self.n_src // self.n_cores
+
+
+def shard_edges_blocked(coo: COO, n_cores: int,
+                        eb_max: Optional[int] = None) -> BlockEdgeShards:
+    """Partition a (padded) COO into per-sender Block-Message tiles.
+
+    Same source-core striping as :func:`shard_edges`, but each sender's
+    edges stay grouped per destination-core block with block-local row
+    offsets.  Edge order inside every tile is the block partition's
+    (row, col) sort — identical to the flat layout's order per destination
+    row, so the blocked and flat aggregation paths are fp32 bit-equal.
+    """
+    blocked = block_partition(coo, n_cores)
+    if eb_max is None:
+        eb_max = max((len(r) for (r, _, _) in blocked.block_edges.values()),
+                     default=1)
+        eb_max = max(int(eb_max), 1)
+    tiles = [block_tiles(blocked, j, eb_max=eb_max) for j in range(n_cores)]
+    return BlockEdgeShards(
+        rows_local=np.stack([t.rows for t in tiles]),
+        cols_local=np.stack([t.cols for t in tiles]),
+        vals=np.stack([t.vals for t in tiles]),
+        n_dst=coo.n_dst, n_src=coo.n_src, n_cores=n_cores)
+
+
+def _local_partials_blocked(rows_b, cols_b, vals_b, x_local, dpc: int):
+    """Per-destination-block partial rows: [B, eb] tiles → [B, dpc, d].
+
+    The block-local offsets are globalized with a trace-time iota
+    (tile·dpc + r) and all tiles scatter through ONE segment-sum — same
+    per-row add order as both the flat layout and a per-tile walk (tiles
+    are concatenated in block order), so results stay fp32 bit-equal, and
+    XLA sees a single large scatter instead of a batched small one (a
+    vmapped per-tile segment-sum lowers to a serialized scatter loop on
+    CPU).  The Pallas twin that scatters per-tile into a [dpc, bd]
+    Aggregate Buffer is :func:`repro.kernels.spmm.spmm_block`.
+    """
+    n_blocks = rows_b.shape[0]
+    rows_g = (rows_b
+              + (jnp.arange(n_blocks, dtype=rows_b.dtype) * dpc)[:, None])
+    gathered = x_local[cols_b.reshape(-1)] * vals_b.reshape(-1)[:, None]
+    out = jax.ops.segment_sum(gathered, rows_g.reshape(-1),
+                              num_segments=n_blocks * dpc)
+    return out.reshape(n_blocks, dpc, -1)
+
+
+def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
+                        n_chunks: int, rows_b, cols_b, vals_b, x_local):
+    """Fused local SpMM + double-buffered fold.
+
+    Per feature wave the SpMM for the half-cube this device does NOT own is
+    computed first and its round-(ndim-1) ``ppermute`` issued immediately;
+    the SpMM for the still-owned half then runs while that first transfer
+    is on the wire (paper §4.3, Fig. 9 — message passing overlapped with
+    MAC work).  The remaining rounds use the double-buffered fold.
+    """
+    n_cores = 1 << ndim
+    dpc = n_dst // n_cores
+    if rows_b.shape[0] != n_cores:
+        # fail loudly: dynamic_slice would CLAMP an out-of-range start and
+        # silently duplicate blocks into both 'mine' and 'send'
+        raise ValueError(
+            f"tile count {rows_b.shape[0]} != 2^ndim = {n_cores}; edge "
+            "arrays must come from shard_edges_blocked on the same mesh")
+    if ndim == 0:
+        return _local_partials_blocked(rows_b, cols_b, vals_b, x_local,
+                                       dpc)[0]
+    idx = jax.lax.axis_index(axis_name)
+    waves = feature_waves(x_local.shape[-1], n_chunks)
+    b0 = ndim - 1                     # top bit: the first fold round
+    half = n_cores // 2
+    my_bit0 = (idx >> b0) & 1
+    perm0 = _dim_perm(n_cores, b0)
+    mines, recvs = [], []
+    for w in waves:
+        xc = jax.lax.slice_in_dim(x_local, w.start, w.stop, axis=-1)
+        # wave k's SpMM runs while wave k-1's send (issued below, consumed
+        # only after the loop) is on the wire — the ping-pong buffer
+        p = _local_partials_blocked(rows_b, cols_b, vals_b, xc, dpc)
+        send = jax.lax.dynamic_slice_in_dim(p, (1 - my_bit0) * half,
+                                            half, 0)
+        recvs.append(jax.lax.ppermute(send, axis_name, perm0))
+        mines.append(jax.lax.dynamic_slice_in_dim(p, my_bit0 * half,
+                                                  half, 0))
+    bufs = [m + r for m, r in zip(mines, recvs)]
+    for b in reversed(range(ndim - 1)):
+        cur_half = bufs[0].shape[0] // 2
+        my_bit = (idx >> b) & 1
+        perm = _dim_perm(n_cores, b)
+
+        def split(buf, my_bit=my_bit, cur_half=cur_half):
+            mine = jax.lax.dynamic_slice_in_dim(buf, my_bit * cur_half,
+                                                cur_half, 0)
+            send = jax.lax.dynamic_slice_in_dim(
+                buf, (1 - my_bit) * cur_half, cur_half, 0)
+            return mine, send
+
+        bufs = double_buffered_exchange(
+            bufs, split,
+            lambda s, perm=perm: jax.lax.ppermute(s, axis_name, perm))
+    return jnp.concatenate([b[0] for b in bufs], axis=-1)   # [dpc, d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _hypercube_aggregate_pipelined(axis_name: str, ndim: int, n_dst: int,
+                                   n_chunks: int, rows_b, cols_b, vals_b,
+                                   x_local):
+    return _pipelined_fwd_impl(axis_name, ndim, n_dst, n_chunks,
+                               rows_b, cols_b, vals_b, x_local)
+
+
+def _pipe_fwd(axis_name, ndim, n_dst, n_chunks, rows_b, cols_b, vals_b,
+              x_local):
+    y = _hypercube_aggregate_pipelined(axis_name, ndim, n_dst, n_chunks,
+                                       rows_b, cols_b, vals_b, x_local)
+    return y, (rows_b, cols_b, vals_b, x_local)
+
+
+def _pipe_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
+    from repro.core.gcn import _spmm_t_blocked
+
+    rows_b, cols_b, vals_b, x_local = res
+    # mirror schedule, same waves: all-gather the error rows double-buffered
+    e_full = hypercube_allgather_pipelined(ct, axis_name, ndim, n_chunks)
+    # Aᵀ walk of the SAME block tiles, column-major: tile b's error rows are
+    # the contiguous slab e_full[b] — one shared implementation with the
+    # single-device blocked layer.
+    dx_local = _spmm_t_blocked(rows_b, cols_b, vals_b,
+                               e_full.reshape(n_dst, -1), x_local.shape[0])
+    dvals = jnp.zeros_like(vals_b)   # adjacency weights are not trained
+    zr = np.zeros(rows_b.shape, dtype=jax.dtypes.float0)
+    zc = np.zeros(cols_b.shape, dtype=jax.dtypes.float0)
+    return (zr, zc, dvals, dx_local)
+
+
+_hypercube_aggregate_pipelined.defvjp(_pipe_fwd, _pipe_bwd)
+
+
+def default_n_chunks() -> int:
+    """Backend-tuned wave count for the pipelined schedule.
+
+    On accelerators with async collectives (TPU/GPU) two waves let the wire
+    hide under MAC work; on the CPU backend collectives are synchronous
+    thread barriers, so extra waves only add slice copies — one wave keeps
+    the blocked layout + pipelined issue order without the copy tax.
+    """
+    return 2 if jax.default_backend() in ("tpu", "gpu") else 1
+
+
+def hypercube_aggregate_pipelined(axis_name: str, ndim: int, n_dst: int,
+                                  rows_b: jnp.ndarray, cols_b: jnp.ndarray,
+                                  vals_b: jnp.ndarray, x_local: jnp.ndarray,
+                                  n_chunks: Optional[int] = None
+                                  ) -> jnp.ndarray:
+    """Per-device body: ``y_local = (A @ x)_local`` with the double-buffered
+    schedule — block-tile SpMM overlapped with the hypercube fold.
+
+    Call inside ``shard_map`` over ``axis_name``; edge arrays are this
+    device's :class:`BlockEdgeShards` slice ([B, eb] tiles), ``x_local`` its
+    feature rows.  fp32 results (and the custom-vjp backward) are bit-equal
+    to :func:`hypercube_aggregate` for ANY wave count; only the issue order
+    differs.  ``n_chunks=None`` picks :func:`default_n_chunks`.
+    """
+    if n_chunks is None:
+        n_chunks = default_n_chunks()
+    return _hypercube_aggregate_pipelined(axis_name, ndim, n_dst,
+                                          int(n_chunks), rows_b, cols_b,
+                                          vals_b, x_local)
 
 
 def shard_edges_by_dst(coo: COO, n_cores: int,

@@ -26,35 +26,50 @@ end-to-end by examples/distributed_gcn.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.graph.coo import COO
+from repro.compat import shard_map
 from repro.graph.sampler import MiniBatch
-from .aggregate import EdgeShards, hypercube_aggregate, shard_edges
+from .aggregate import (hypercube_aggregate, hypercube_aggregate_pipelined,
+                        shard_edges, shard_edges_blocked)
 
 Params = List[Dict[str, jnp.ndarray]]
 
 
 def shard_minibatch(mb: MiniBatch, features: np.ndarray, labels: np.ndarray,
-                    n_cores: int) -> Dict[str, Any]:
+                    n_cores: int, *, blocked: bool = False) -> Dict[str, Any]:
     """Host-side: sampled minibatch → device-ready sharded arrays.
 
     Layers come deepest-first (matching forward consumption order); features
-    are the frontier rows (already padded to a multiple of P)."""
-    shards = [shard_edges(coo, n_cores) for coo in mb.layers]
-    return {
-        "edges": [
+    are the frontier rows (already padded to a multiple of P).
+
+    ``blocked=True`` ships the Block-Message tile layout
+    ([P, B, eb] per-destination-block arrays, :func:`shard_edges_blocked`)
+    that the pipelined/overlapped aggregation consumes; the default flat
+    layout feeds the serial schedule."""
+    if blocked:
+        shards = [shard_edges_blocked(coo, n_cores) for coo in mb.layers]
+        edges = [
+            {"rows": jnp.asarray(es.rows_local),
+             "cols": jnp.asarray(es.cols_local),
+             "vals": jnp.asarray(es.vals)}
+            for es in shards
+        ]
+    else:
+        shards = [shard_edges(coo, n_cores) for coo in mb.layers]
+        edges = [
             {"rows": jnp.asarray(es.rows_global),
              "cols": jnp.asarray(es.cols_local),
              "vals": jnp.asarray(es.vals)}
             for es in shards
-        ],
+        ]
+    return {
+        "edges": edges,
         "dims": [(es.n_dst, es.n_src) for es in shards],
         "x": jnp.asarray(features, jnp.float32),
         "labels": jnp.asarray(labels, jnp.int32),
@@ -62,27 +77,42 @@ def shard_minibatch(mb: MiniBatch, features: np.ndarray, labels: np.ndarray,
 
 
 def _forward_local(params, edges, dims, x_local, ndim: int,
-                   axis: str = "model"):
-    """Per-device 2..L-layer GCN forward, deepest layer first (CoAg)."""
+                   axis: str = "model", overlap: bool = False,
+                   n_chunks: Optional[int] = None):
+    """Per-device 2..L-layer GCN forward, deepest layer first (CoAg).
+
+    ``overlap=True`` expects the Block-Message tile layout per layer and
+    runs the double-buffered aggregation (bit-equal values, pipelined
+    issue order)."""
     h = x_local
     n_layers = len(params)
     for l in range(n_layers - 1, -1, -1):
         e = edges[l]
         n_dst, _ = dims[l]
         h = h @ params[n_layers - 1 - l]["w"]          # local combination
-        h = hypercube_aggregate(axis, ndim, n_dst,      # routed aggregation
-                                e["rows"][0], e["cols"][0], e["vals"][0], h)
+        if overlap:
+            h = hypercube_aggregate_pipelined(
+                axis, ndim, n_dst, e["rows"][0], e["cols"][0], e["vals"][0],
+                h, n_chunks)
+        else:
+            h = hypercube_aggregate(axis, ndim, n_dst,  # routed aggregation
+                                    e["rows"][0], e["cols"][0],
+                                    e["vals"][0], h)
         if l != 0:
             h = jnp.maximum(h, 0.0)
     return h                                            # [batch/P, classes]
 
 
 def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
-                    lr: float = 0.05, axis: str = "model"):
+                    lr: float = 0.05, axis: str = "model", *,
+                    overlap: bool = False, n_chunks: Optional[int] = None):
     """Build the jitted distributed train step for fixed layer dims.
 
     step(params, batch) -> (params, loss); params replicated, batch arrays
-    sharded on their leading (core) axis.
+    sharded on their leading (core) axis.  ``overlap=True`` selects the
+    pipelined aggregation (pass ``blocked=True`` to
+    :func:`shard_minibatch`); forward AND backward then run the
+    double-buffered schedule (the backward in mirror order).
     """
     n_cores = mesh.shape[axis]
     ndim = int(np.log2(n_cores))
@@ -91,7 +121,7 @@ def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
     def body(params, edges, x_local, labels_local):
         def loss_fn(params):
             logits = _forward_local(params, edges, dims, x_local, ndim,
-                                    axis)
+                                    axis, overlap, n_chunks)
             logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
             nll = -jnp.take_along_axis(logp, labels_local[:, None],
                                        axis=-1)[:, 0]
@@ -105,12 +135,13 @@ def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
                                         grads)
         return params, loss
 
-    edge_spec = {"rows": P(axis, None), "cols": P(axis, None),
-                 "vals": P(axis, None)}
+    nd = 3 if overlap else 2        # [P, B, eb] tiles vs [P, e_max] flat
+    espec = P(axis, *([None] * (nd - 1)))
+    edge_spec = {"rows": espec, "cols": espec, "vals": espec}
 
     def step(params, batch):
         n_layers = len(batch["edges"])
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=mesh,
             in_specs=(P(), [edge_spec] * n_layers, P(axis, None), P(axis)),

@@ -1,34 +1,70 @@
-"""Compute/communication overlap: microbatched gradient accumulation.
+"""Compute/communication overlap: double-buffered collectives + microbatching.
 
-The paper overlaps aggregation messages with MAC compute via ping-pong
-buffers (§4.2) and judges a layer by
-``t = max(t_message_passing, t_comb + t_agg)`` (Eq. 9).  The framework-level
-analogue at scale is microbatching: split the per-device batch into M
-microbatches, scan compute, and expose the gradient all-reduce early enough
-that XLA's latency-hiding scheduler overlaps it with the next microbatch's
-backward — the bucketed all-reduce every 1000-node trainer runs.
+Two layers of overlap live here, both instances of the paper's Eq. 9
+criterion ``t = max(t_message_passing, t_comb + t_agg)`` — a layer is judged
+by the slower of wire and MAC work, so the win comes from keeping both busy:
 
-Two modes:
-  * ``bucketed=False`` — accumulate locally, one psum at the end (min bytes,
-    zero overlap: the collective sits on the critical path);
-  * ``bucketed=True``  — psum each microbatch's grads inside the scan; bytes
-    × M but every psum overlaps the next microbatch's compute.  Eq. 9 says
-    this wins whenever compute-per-microbatch ≥ wire-time-per-bucket, which
-    the roofline table evaluates per arch.
+1. **Double-buffered exchange** (:func:`double_buffered_exchange`): the
+   dataflow form of the paper's ping-pong Block-Message buffers (§4.2/§4.3,
+   Fig. 9).  A hypercube round's traffic is split into feature-dimension
+   waves (:func:`repro.core.schedule.feature_waves`); every wave's
+   ``ppermute`` is issued BEFORE any wave's local combine is consumed, so
+   XLA's latency-hiding scheduler can run wave *k*'s add (and the next
+   wave's local SpMM) under wave *k+1*'s wire transfer.  The per-element
+   add order is untouched — the pipelined fold stays bit-identical to the
+   serial one in fp32.  :mod:`repro.distributed.aggregate` builds its
+   pipelined reduce-scatter / all-gather out of this primitive.
 
-``jax.remat`` wraps the loss for activation checkpointing (the SFBP buffers
-— save-for-backprop — are the FPGA analogue; remat trades their HBM for
-recompute, the knob the §Perf hillclimb turns).
+2. **Microbatched gradient accumulation** (:func:`grad_accum`): split the
+   per-device batch into M microbatches, scan compute, and expose the
+   gradient all-reduce early enough that XLA overlaps it with the next
+   microbatch's backward — the bucketed all-reduce every 1000-node trainer
+   runs.  ``bucketed=False`` accumulates locally with one psum at the end
+   (min bytes, zero overlap); ``bucketed=True`` psums every microbatch
+   (bytes × M, every psum hidden behind compute).  ``jax.remat`` wraps the
+   loss for activation checkpointing (the SFBP save-for-backprop buffers
+   are the FPGA analogue).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
 
+
+# ---------------------------------------------------------------------------
+# Double-buffered collective exchange (the ping-pong buffer, in dataflow).
+# ---------------------------------------------------------------------------
+def double_buffered_exchange(chunks: Sequence[jnp.ndarray],
+                             split_fn: Callable,
+                             permute_fn: Callable) -> List[jnp.ndarray]:
+    """One pipelined hypercube round over feature-wave ``chunks``.
+
+    For every chunk, ``split_fn(chunk) -> (mine, send)`` separates the half
+    this device keeps from the half it ships; ``permute_fn(send)`` is the
+    round's ``ppermute``.  All sends are issued before any ``mine + recv``
+    combine consumes a result — the ping-pong structure: while chunk *k*'s
+    transfer is on the wire, chunk *k+1*'s split (and, in the fused
+    aggregation path, its local SpMM) has independent work to run.
+
+    Returns the combined ``mine + recv`` per chunk.  Addition order per
+    element is exactly the serial schedule's, so results are bit-identical.
+    """
+    mines, recvs = [], []
+    for chunk in chunks:
+        mine, send = split_fn(chunk)
+        recvs.append(permute_fn(send))      # issued before any combine
+        mines.append(mine)
+    return [m + r for m, r in zip(mines, recvs)]
+
+
+# ---------------------------------------------------------------------------
+# Microbatched gradient accumulation.
+# ---------------------------------------------------------------------------
 def grad_accum(loss_fn: Callable, params, batch, *, n_micro: int,
                axis_names: Tuple[str, ...] = (), bucketed: bool = False,
                remat: bool = False):
@@ -75,5 +111,5 @@ def grad_accum(loss_fn: Callable, params, batch, *, n_micro: int,
 def _axis_prod(axis_names: Tuple[str, ...]):
     size = 1
     for a in axis_names:
-        size = size * jax.lax.axis_size(a)
+        size = size * axis_size(a)
     return size

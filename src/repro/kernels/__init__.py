@@ -4,9 +4,9 @@
 #   flash.py — flash attention (the prefill memory wall found in §Perf)
 # ops.py holds the jit'd public wrappers (interpret=True off-TPU),
 # ref.py the pure-jnp oracles the tests sweep against.
-from .ops import gemm, spmm
+from .ops import gemm, spmm, spmm_block
 from .flash import flash_mha
 from .ref import gemm_ref, mha_ref, spmm_ref, spmm_t_ref
 
-__all__ = ["gemm", "spmm", "flash_mha", "gemm_ref", "mha_ref", "spmm_ref",
-           "spmm_t_ref"]
+__all__ = ["gemm", "spmm", "spmm_block", "flash_mha", "gemm_ref", "mha_ref",
+           "spmm_ref", "spmm_t_ref"]

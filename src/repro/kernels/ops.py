@@ -60,3 +60,22 @@ def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     out = _spmm.spmm(rp, cp, vp, xp, n_dst, bd=bd, be=be,
                      interpret=not _on_tpu())
     return out[:, :d]
+
+
+def spmm_block(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+               x: jnp.ndarray, dpc: int, *, bd: int = 128, be: int = 256
+               ) -> jnp.ndarray:
+    """Tile-padding wrapper over :func:`repro.kernels.spmm.spmm_block`.
+
+    Arguments follow the Block-Message tile layout
+    (:class:`repro.core.blockmsg.BlockTiles`): [n_blocks, e_blk] edge arrays
+    with block-local row offsets; returns [n_blocks * dpc, d].
+    """
+    d = x.shape[1]
+    rp = _pad_to(rows, 1, be)
+    cp = _pad_to(cols, 1, be)
+    vp = _pad_to(vals, 1, be)          # zero padding ⇒ no-op edges
+    xp = _pad_to(x, 1, bd)
+    out = _spmm.spmm_block(rp, cp, vp, xp, dpc, bd=bd, be=be,
+                           interpret=not _on_tpu())
+    return out[:, :d]

@@ -60,6 +60,80 @@ def _spmm_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _spmm_block_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
+                       n_e: int, dpc: int, n_src: int):
+    """Block-layout variant: one grid row per destination-core tile.
+
+    ``rows`` are BLOCK-LOCAL offsets (the Block-Message B values), so the
+    scatter one-hot is [dpc, be] — one core's Aggregate Buffer — instead of
+    a global [n_dst, be].  The gather side is unchanged: sources are already
+    local to the sender (NUMA), the destination side is what the Block
+    Message compresses.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = rows_ref[0, :]                       # [be] int32, block-local
+    cols = cols_ref[0, :]
+    vals = vals_ref[0, :]                       # [be] f32 (0 = padding)
+    be = rows.shape[0]
+    x = x_ref[...]                              # [n_src, bd] VMEM tile
+
+    src_iota = jax.lax.broadcasted_iota(jnp.int32, (be, n_src), 1)
+    onehot_src = (src_iota == cols[:, None]).astype(x.dtype)
+    g = jnp.dot(onehot_src, x, preferred_element_type=jnp.float32)
+
+    # per-block row offsets: the one-hot spans one tile, not the whole graph
+    dst_iota = jax.lax.broadcasted_iota(jnp.int32, (dpc, be), 0)
+    onehot_dst = jnp.where(dst_iota == rows[None, :], vals[None, :], 0.0)
+    acc_ref[...] += jnp.dot(onehot_dst.astype(jnp.float32), g,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_e - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dpc", "bd", "be", "interpret"))
+def spmm_block(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+               x: jnp.ndarray, dpc: int, *, bd: int = 128, be: int = 256,
+               interpret: bool = False) -> jnp.ndarray:
+    """Block-layout SpMM: ``y[b*dpc + r] += v * x[c]`` over per-destination-
+    block COO tiles (:class:`repro.core.blockmsg.BlockTiles` arrays).
+
+    ``rows``/``cols``/``vals``: [n_blocks, e_blk] with block-local row
+    offsets in ``[0, dpc)``; ``x``: the sender's dense [n_src, d] feature
+    shard.  Returns [n_blocks * dpc, d] — tile *b* is the partial rows this
+    sender contributes to destination core *b*, ready for the hypercube
+    fold.  ``e_blk`` and ``d`` must be multiples of (be, bd); pad edges with
+    val=0 (:func:`repro.kernels.ops.spmm_block` absorbs the padding).
+    """
+    n_blocks, e_blk = rows.shape
+    n_src, d = x.shape
+    if e_blk % be or d % bd:
+        raise ValueError(
+            f"e_blk={e_blk}, d={d} not divisible by (be={be}, bd={bd})")
+    grid = (n_blocks, d // bd, e_blk // be)
+    kernel = functools.partial(_spmm_block_kernel, n_e=grid[2], dpc=dpc,
+                               n_src=n_src)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, be), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, be), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, be), lambda i, j, k: (i, k)),
+            pl.BlockSpec((n_src, bd), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((dpc, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * dpc, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((dpc, bd), jnp.float32)],
+        interpret=interpret,
+    )(rows.astype(jnp.int32), cols.astype(jnp.int32),
+      vals.astype(jnp.float32), x)
+
+
 @functools.partial(jax.jit, static_argnames=("n_dst", "bd", "be", "interpret"))
 def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
          x: jnp.ndarray, n_dst: int, *, bd: int = 128, be: int = 256,

@@ -1,0 +1,4 @@
+# Launch-layer entry points: mesh construction, dry-run compile sweep,
+# HLO accounting, train/serve drivers.  Modules are imported directly
+# (e.g. ``repro.launch.mesh``); nothing is re-exported here to keep the
+# jax-import side effects (XLA_FLAGS in dryrun.py) explicit.

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional  # noqa: E402
 
 import jax           # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.configs import SHAPES, all_cells, applicable, get_config  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -37,7 +38,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     t0 = time.time()
-    with jax.set_mesh(mesh):   # context mesh: pjit specs + nested shard_map
+    with set_mesh(mesh):   # context mesh: pjit specs + nested shard_map
         args, info = abstract_inputs(cfg, shape, mesh)
         step = build_step(cfg, shape.kind,
                           sp_spec=sp_spec_for(cfg, shape, mesh),

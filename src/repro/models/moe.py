@@ -21,6 +21,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as compat_axis_size
+from repro.compat import shard_map as compat_shard_map
+
 from .config import ArchConfig
 from .transformer import _norm_init
 
@@ -143,7 +146,7 @@ def moe_ffn_ep(x: jnp.ndarray, p: Params, cfg: ArchConfig,
         # x_l: [b_l, s_l, d] sequence-sharded slice
         x_full = jax.lax.all_gather(x_l, "model", axis=1, tiled=True)
         gates, eidx, aux = _route(x_full, {"router": router}, cfg)
-        n_model = jax.lax.axis_size("model")
+        n_model = compat_axis_size("model")
         e_local = e // n_model
         j = jax.lax.axis_index("model")
         lo = j * e_local
@@ -174,18 +177,20 @@ def moe_ffn_ep(x: jnp.ndarray, p: Params, cfg: ArchConfig,
         # fold partial expert outputs + return to the s-sharded residual
         y = jax.lax.psum_scatter(y_partial, "model", scatter_dimension=1,
                                  tiled=True)
-        # aux is numerically identical across the model row; the pmean makes
-        # that replication provable to shard_map's varying-axes checker
-        aux = jax.lax.pmean(aux, ("model",) + dp)
-        return y, aux
+        # aux leaves the region device-varying ([1] per device) and is
+        # averaged outside — a replicated (P()) output would need an in-body
+        # pmean, whose transpose chokes on symbolic-Zero cotangents when aux
+        # is unused by the loss (older shard_map); the mean outside is the
+        # same value and differentiates on every jax we support
+        return y, aux[None]
 
-    y, aux = jax.shard_map(
+    y, aux = compat_shard_map(
         body,
         in_specs=(P_(dp, "model", None), P_(), P_("model", None, None),
                   P_("model", None, None), P_("model", None, None)),
-        out_specs=(P_(dp, "model", None), P_()),
+        out_specs=(P_(dp, "model", None), P_(dp + ("model",))),
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
-    return y, aux
+    return y, aux.mean()
 
 
 # ---------------------------------------------------------------------------

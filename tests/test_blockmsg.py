@@ -1,6 +1,9 @@
 """Block-Message compression + staged waves (§4.3.3, Fig. 6/7)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blockmsg import (build_waves, compress_block,

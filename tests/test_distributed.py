@@ -11,6 +11,7 @@ from conftest import run_subprocess
 def test_hypercube_aggregate_fwd_bwd_and_uma():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.graph.coo import from_edges
         from repro.distributed.aggregate import (shard_edges,
@@ -27,7 +28,7 @@ def test_hypercube_aggregate_fwd_bwd_and_uma():
         ref = coo.matmul(x)
         mesh = Mesh(np.array(jax.devices()), ('model',))
         es = shard_edges(coo, P_CORES)
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda r, c, v, xl: hypercube_aggregate(
                 'model', ndim, n_dst, r[0], c[0], v[0], xl),
             mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model'))
@@ -44,7 +45,7 @@ def test_hypercube_aggregate_fwd_bwd_and_uma():
                                    rtol=2e-3, atol=2e-3)
 
         esd = shard_edges_by_dst(coo, P_CORES)
-        fn_uma = jax.shard_map(
+        fn_uma = shard_map(
             lambda r, c, v, xl: uma_aggregate(
                 'model', ndim, n_dst, r[0], c[0], v[0], xl),
             mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model'))
@@ -62,6 +63,7 @@ def test_hypercube_wire_bytes_beat_uma_in_hlo():
     trivial graph."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.graph.coo import from_edges
         from repro.distributed.aggregate import (shard_edges,
@@ -79,11 +81,11 @@ def test_hypercube_wire_bytes_beat_uma_in_hlo():
         mesh = Mesh(np.array(jax.devices()), ('model',))
         es = shard_edges(coo, P_CORES)
         esd = shard_edges_by_dst(coo, P_CORES)
-        hyper = jax.jit(jax.shard_map(
+        hyper = jax.jit(shard_map(
             lambda r, c, v, xl: hypercube_aggregate(
                 'model', ndim, n_dst, r[0], c[0], v[0], xl),
             mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model')))
-        uma = jax.jit(jax.shard_map(
+        uma = jax.jit(shard_map(
             lambda r, c, v, xl: uma_aggregate(
                 'model', ndim, n_dst, r[0], c[0], v[0], xl),
             mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model')))
@@ -103,6 +105,7 @@ def test_hypercube_wire_bytes_beat_uma_in_hlo():
 def test_compressed_psum_and_error_feedback():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.distributed.compress import (compressed_psum,
             ef_compress_grads, init_error_state)
@@ -110,7 +113,7 @@ def test_compressed_psum_and_error_feedback():
         mesh = Mesh(np.array(jax.devices()), ('model',))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((16, 4096)), jnp.float32)
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda xl: compressed_psum(xl[0], 'model', 4)[None],
             mesh=mesh, in_specs=(P('model'),), out_specs=P('model'))
         out = np.asarray(fn(x))[0]
@@ -125,7 +128,7 @@ def test_compressed_psum_and_error_feedback():
             m, e = ef_compress_grads({'w': gl[0]}, {'w': el[0]},
                                      'model', 4)
             return m['w'][None], e['w'][None]
-        step = jax.shard_map(run, mesh=mesh,
+        step = shard_map(run, mesh=mesh,
                              in_specs=(P('model'), P('model')),
                              out_specs=(P('model'), P('model')))
         err = jnp.zeros((16, 1024), jnp.float32)
@@ -143,6 +146,7 @@ def test_compressed_psum_and_error_feedback():
 def test_grad_accum_matches_full_batch():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from repro.distributed.overlap import grad_accum
 
         rng = np.random.default_rng(0)
@@ -168,6 +172,7 @@ def test_grad_accum_matches_full_batch():
 def test_elastic_reshard_across_meshes():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
         from repro.checkpoint import reshard
 
@@ -189,6 +194,7 @@ def test_moe_ep_shardmap_matches_reference():
     the same values and gradients as the single-device reference."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from jax.sharding import PartitionSpec as P
         from repro.models.config import ArchConfig
         from repro.models.moe import init_moe_params, moe_ffn, moe_ffn_ep
@@ -204,7 +210,7 @@ def test_moe_ep_shardmap_matches_reference():
         y_ref, _ = moe_ffn(x, p, cfg, capacity_factor=2.0)
         g_ref = jax.grad(lambda x: jnp.sum(
             moe_ffn(x, p, cfg, 2.0)[0] ** 2))(x)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y_ep, _ = jax.jit(lambda x, p: moe_ffn_ep(
                 x, p, cfg, 2.0, ep_spec))(x, p)
             g_ep = jax.grad(lambda x: jnp.sum(
@@ -222,6 +228,7 @@ def test_distributed_gcn_matches_reference():
     aggregation + Weight-Bank grad sync == single-device GCN math."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
+        from repro.compat import shard_map, set_mesh
         from repro.graph import NeighborSampler, make_dataset
         from repro.distributed.gcn_train import (init_params,
             make_train_step, shard_minibatch)
@@ -241,7 +248,7 @@ def test_distributed_gcn_matches_reference():
         mesh = jax.make_mesh((16,), ('model',))
         batch = shard_minibatch(mb, feats, labels, 16)
         params = init_params(jax.random.PRNGKey(0), [(32, 16), (16, 7)])
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step = make_train_step(mesh, batch['dims'], lr=0.3)
             p1, first = step(params, batch)
             for _ in range(25):

@@ -2,6 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.graph.coo import COO, from_edges, mean_normalize, pad_coo

@@ -1,0 +1,237 @@
+"""Pipelined (double-buffered) aggregation + block-layout SpMM.
+
+Contracts:
+  * the pipelined hypercube fold is fp32 BIT-EXACT vs the serial fold for
+    any wave count, on 2/4/8 simulated devices (same per-element add order,
+    only the issue order differs);
+  * the full pipelined aggregate (block tiles + fused fold) is bit-exact vs
+    the serial aggregate, forward;
+  * the block-layout SpMM kernel (per-block row offsets, no global one-hot)
+    matches kernels/ref.py on random block graphs;
+  * the overlapped train step computes the same loss as the serial one.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Block-layout SpMM kernel vs the pure-jnp oracle (single device).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_cores,n_dst,n_src,d,e", [
+    (4, 64, 64, 32, 500),
+    (8, 128, 96, 64, 1000),
+    (2, 32, 200, 48, 333),
+])
+def test_spmm_block_matches_ref(rng, n_cores, n_dst, n_src, d, e):
+    import jax.numpy as jnp
+    from repro.core.blockmsg import dst_tiles
+    from repro.graph.coo import from_edges
+    from repro.graph.partition import block_partition
+    from repro.kernels.ops import spmm_block
+    from repro.kernels.ref import spmm_ref
+
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     rng.standard_normal(e).astype(np.float32), n_dst, n_src)
+    tiles = dst_tiles(block_partition(coo, n_cores))
+    x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+    out = spmm_block(jnp.asarray(tiles.rows), jnp.asarray(tiles.cols),
+                     jnp.asarray(tiles.vals), x, tiles.dst_per_core)
+    ref = spmm_ref(coo.rows, coo.cols, coo.vals, x, n_dst)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sender_tiles_partials_match_flat_bit_exact(rng):
+    """Per-destination-block partials == flat global segment-sum, bit-exact
+    (same per-row add order — the invariant the pipelined fold needs)."""
+    import jax.numpy as jnp
+    from repro.distributed.aggregate import (
+        _local_partials, _local_partials_blocked, shard_edges,
+        shard_edges_blocked)
+    from repro.graph.coo import from_edges
+
+    P, n_dst, n_src, d, e = 4, 64, 128, 16, 900
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     rng.standard_normal(e).astype(np.float32), n_dst, n_src)
+    es = shard_edges(coo, P)
+    eb = shard_edges_blocked(coo, P)
+    x = jnp.asarray(rng.standard_normal((n_src // P, d)), jnp.float32)
+    for j in range(P):
+        flat = _local_partials(jnp.asarray(es.rows_global[j]),
+                               jnp.asarray(es.cols_local[j]),
+                               jnp.asarray(es.vals[j]), x, n_dst)
+        blk = _local_partials_blocked(jnp.asarray(eb.rows_local[j]),
+                                      jnp.asarray(eb.cols_local[j]),
+                                      jnp.asarray(eb.vals[j]), x, n_dst // P)
+        assert np.array_equal(np.asarray(flat).reshape(P, n_dst // P, d),
+                              np.asarray(blk)), f"core {j} not bit-exact"
+
+
+def test_feature_waves_cover_and_order():
+    from repro.core.schedule import feature_waves
+
+    for d, nc in [(7, 2), (128, 4), (1, 3), (16, 1), (5, 8)]:
+        waves = feature_waves(d, nc)
+        assert waves[0].start == 0
+        assert waves[-1].stop == d
+        for a, b in zip(waves, waves[1:]):
+            assert a.stop == b.start
+        assert max(w.size for w in waves) - min(w.size for w in waves) <= 1
+
+
+@pytest.mark.parametrize("order", ["coag", "agco"])
+@pytest.mark.parametrize("activate", [True, False])
+def test_gcn_layer_blocked_matches_reference(rng, order, activate):
+    """The block-tile GCN layer (fwd through spmm_block, transpose-free
+    tile-walk bwd) matches the flat transpose-free layer."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.blockmsg import dst_tiles
+    from repro.core.gcn import gcn_layer, gcn_layer_blocked
+    from repro.graph.coo import from_edges
+    from repro.graph.partition import block_partition
+
+    n_dst, n_src, d, h, e = 64, 96, 24, 12, 700
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     rng.standard_normal(e).astype(np.float32), n_dst, n_src)
+    tiles = dst_tiles(block_partition(coo, 4))
+    x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, h)), jnp.float32)
+    y_ref = gcn_layer(coo, x, w, order=order, activate=activate)
+    y_blk = gcn_layer_blocked(tiles, x, w, order=order, activate=activate)
+    np.testing.assert_allclose(np.asarray(y_blk), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+    def loss(fn):
+        return lambda x, w: jnp.sum(fn(x, w) ** 2)
+
+    g_ref = jax.grad(loss(lambda x, w: gcn_layer(
+        coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
+    g_blk = jax.grad(loss(lambda x, w: gcn_layer_blocked(
+        tiles, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
+    for a, b in zip(g_ref, g_blk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device bit-exactness (2/4/8 simulated cores, subprocess backend).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_devices", [2, 4, 8])
+def test_pipelined_fold_bit_exact(n_devices):
+    ndim = int(np.log2(n_devices))
+    run_subprocess(textwrap.dedent(f"""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.distributed.aggregate import (
+            hypercube_reduce_scatter, hypercube_reduce_scatter_pipelined)
+
+        PC, ndim = {n_devices}, {ndim}
+        t, d = 16, 37                       # ragged d: uneven waves
+        rng = np.random.default_rng(0)
+        part = jnp.asarray(rng.standard_normal((PC, PC, t, d)), jnp.float32)
+        mesh = Mesh(np.array(jax.devices()), ('model',))
+        ser = shard_map(
+            lambda p: hypercube_reduce_scatter(p[0], 'model', ndim)[None],
+            mesh=mesh, in_specs=(P('model'),), out_specs=P('model'))
+        a = np.asarray(ser(part))
+        for nc in (1, 2, 3):
+            pip = shard_map(
+                lambda p, nc=nc: hypercube_reduce_scatter_pipelined(
+                    p[0], 'model', ndim, nc)[None],
+                mesh=mesh, in_specs=(P('model'),), out_specs=P('model'))
+            b = np.asarray(pip(part))
+            assert np.array_equal(a, b), (nc, np.abs(a - b).max())
+        print('OK')
+    """), n_devices=n_devices)
+
+
+@pytest.mark.parametrize("n_devices", [4, 8])
+def test_pipelined_aggregate_matches_serial(n_devices):
+    """Full fused path: forward bit-exact vs serial aggregate; gradients
+    match the dense reference (transpose-free mirror backward)."""
+    ndim = int(np.log2(n_devices))
+    run_subprocess(textwrap.dedent(f"""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.graph.coo import from_edges
+        from repro.distributed.aggregate import (
+            shard_edges, shard_edges_blocked, hypercube_aggregate,
+            hypercube_aggregate_pipelined)
+
+        PC, ndim = {n_devices}, {ndim}
+        n_dst, n_src, d, e = 16 * PC, 32 * PC, 20, 2500
+        rng = np.random.default_rng(0)
+        coo = from_edges(rng.integers(0, n_dst, e),
+                         rng.integers(0, n_src, e),
+                         rng.standard_normal(e).astype(np.float32),
+                         n_dst, n_src)
+        x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+        mesh = Mesh(np.array(jax.devices()), ('model',))
+        es = shard_edges(coo, PC)
+        eb = shard_edges_blocked(coo, PC)
+        ser = shard_map(
+            lambda r, c, v, xl: hypercube_aggregate(
+                'model', ndim, n_dst, r[0], c[0], v[0], xl),
+            mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model'))
+        ys = np.asarray(ser(jnp.asarray(es.rows_global),
+                            jnp.asarray(es.cols_local),
+                            jnp.asarray(es.vals), x))
+        for nc in (1, 2):
+            pip = shard_map(
+                lambda r, c, v, xl, nc=nc: hypercube_aggregate_pipelined(
+                    'model', ndim, n_dst, r[0], c[0], v[0], xl, nc),
+                mesh=mesh, in_specs=(P('model'),) * 4, out_specs=P('model'))
+            args = (jnp.asarray(eb.rows_local), jnp.asarray(eb.cols_local),
+                    jnp.asarray(eb.vals))
+            yp = np.asarray(pip(*args, x))
+            assert np.array_equal(ys, yp), (nc, np.abs(ys - yp).max())
+            g1 = jax.grad(lambda xx: jnp.sum(pip(*args, xx) ** 2))(x)
+            g2 = jax.grad(lambda xx: jnp.sum(coo.matmul(xx) ** 2))(x)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=2e-3, atol=2e-3)
+        print('OK')
+    """), n_devices=n_devices)
+
+
+def test_overlap_train_step_matches_serial():
+    """make_train_step(overlap=True) computes the same loss trajectory as
+    the serial step (Weight-Bank sync + transpose-free mirror included)."""
+    run_subprocess(textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.graph import NeighborSampler, make_dataset
+        from repro.distributed.gcn_train import (init_params,
+            make_train_step, shard_minibatch)
+
+        ds = make_dataset('flickr', scale=0.005, feat_dim=32)
+        sampler = NeighborSampler(ds.graph, fanouts=(5, 5),
+                                  pad_multiple=8, seed=0)
+        rng = np.random.default_rng(0)
+        seeds = rng.permutation(ds.graph.n_nodes)[:32]
+        mb = sampler.sample(seeds, rng=np.random.default_rng(1))
+        feats = ds.features[np.minimum(mb.input_nodes,
+                                       ds.graph.n_nodes - 1)]
+        pad = mb.layers[0].n_dst - len(seeds)
+        labels = ds.labels[np.pad(seeds, (0, pad))] % 7
+
+        mesh = jax.make_mesh((8,), ('model',))
+        params = init_params(jax.random.PRNGKey(0), [(32, 16), (16, 7)])
+        b_ser = shard_minibatch(mb, feats, labels, 8)
+        b_pip = shard_minibatch(mb, feats, labels, 8, blocked=True)
+        s_ser = make_train_step(mesh, b_ser['dims'], lr=0.3)
+        s_pip = make_train_step(mesh, b_pip['dims'], lr=0.3, overlap=True,
+                                n_chunks=2)
+        p1, p2 = params, params
+        for i in range(5):
+            p1, l1 = s_ser(p1, b_ser)
+            p2, l2 = s_pip(p2, b_pip)
+            assert abs(float(l1) - float(l2)) < 1e-6, (i, float(l1),
+                                                       float(l2))
+        print('OK', float(l1))
+    """), n_devices=8)

@@ -1,6 +1,9 @@
 """Algorithm 1 (parallel multicast routing) — §4.3 invariants + Fig. 9."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.routing import (aggregate_bandwidth_model, fuse_experiment,
