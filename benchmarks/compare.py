@@ -1,0 +1,114 @@
+"""Benchmark regression diff — old vs new ``BENCH_*.json``.
+
+    PYTHONPATH=src python -m benchmarks.compare OLD.json NEW.json [--strict]
+
+Flags tracked keys that moved >10% in the bad direction (warn-only by
+default: CI prints the table and keeps going; ``--strict`` exits 1 on any
+regression so the gate can be tightened later).  Keys are dotted paths into
+the JSON record; direction says which way is better.  Missing keys (old
+records predate a metric, or an arm was skipped) are reported as untracked,
+never as failures — a fresh metric cannot regress.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+# dotted path -> "higher" | "lower" (which direction is better).  Only
+# load-robust metrics belong here: the paired-median speedups and the
+# kernel error bounds.  Absolute per-step wall times are deliberately NOT
+# tracked — on shared CI hosts they swing 2-3x with background load (see
+# epoch_time.measured_overlap's methodology note), so a 10% gate on them
+# would fail chronically on noise once --strict is enabled.
+TRACKED: Dict[str, str] = {
+    "overlap.speedup": "higher",
+    "overlap.speedup_ell": "higher",
+    "overlap.agg_fwd_speedup": "higher",
+    "overlap.agg_fwdbwd_speedup": "higher",
+    "overlap.agg_fwd_speedup_ell": "higher",
+    "overlap.agg_fwdbwd_speedup_ell": "higher",
+    "spmm_block.max_abs_err": "lower",
+    "spmm_ell.max_abs_err": "lower",
+}
+
+
+def get_path(rec: Dict, path: str) -> Optional[float]:
+    cur = rec
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+def compare_records(old: Dict, new: Dict, threshold: float = 0.10
+                    ) -> Tuple[List[Dict], List[Dict]]:
+    """Returns (rows, regressions); every row has old/new/delta/status."""
+    rows, regressions = [], []
+    for key, direction in TRACKED.items():
+        o, n = get_path(old, key), get_path(new, key)
+        if o is None or n is None:
+            rows.append({"key": key, "old": o, "new": n, "delta": None,
+                         "status": "untracked"})
+            continue
+        if o == 0:
+            # a zero baseline is meaningful (e.g. a bit-exact kernel's
+            # max_abs_err): ANY nonzero drift in the bad direction is a
+            # regression, never delta=0%
+            delta = 0.0 if n == 0 else float("inf") * (1 if n > o else -1)
+            bad = n > 0 if direction == "lower" else n < 0
+        else:
+            delta = (n - o) / abs(o)
+            bad = delta < -threshold if direction == "higher" \
+                else delta > threshold
+        status = "REGRESSION" if bad else "ok"
+        row = {"key": key, "old": o, "new": n, "delta": delta,
+               "status": status, "better": direction}
+        rows.append(row)
+        if bad:
+            regressions.append(row)
+    return rows, regressions
+
+
+def print_report(rows: List[Dict], regressions: List[Dict],
+                 threshold: float) -> None:
+    print(f"## benchmark diff (threshold ±{threshold:.0%}, warn-only "
+          "unless --strict)")
+    print("key,old,new,delta,status")
+    for r in rows:
+        if r["delta"] is None:
+            print(f"{r['key']},{r['old']},{r['new']},-,{r['status']}")
+        else:
+            print(f"{r['key']},{r['old']:.4g},{r['new']:.4g},"
+                  f"{r['delta']:+.1%},{r['status']}")
+    if regressions:
+        print(f"# {len(regressions)} regression(s) >"
+              f"{threshold:.0%} on tracked keys:")
+        for r in regressions:
+            print(f"#   {r['key']}: {r['old']:.4g} -> {r['new']:.4g} "
+                  f"({r['delta']:+.1%}, better={r['better']})")
+    else:
+        print("# no regressions on tracked keys")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="previous BENCH_*.json")
+    ap.add_argument("new", help="freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any regression (CI default: warn only)")
+    args = ap.parse_args()
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    rows, regressions = compare_records(old, new, args.threshold)
+    print_report(rows, regressions, args.threshold)
+    if args.strict and regressions:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

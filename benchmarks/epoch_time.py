@@ -123,11 +123,15 @@ def measured_epoch(name: str, scale: float = 0.01, batch: int = 64,
 # ---------------------------------------------------------------------------
 # --overlap arm: serial vs pipelined hypercube aggregation, measured.
 # ---------------------------------------------------------------------------
-def _synthetic_sharded_batch(n_cores: int, batch: int, mid: int,
-                             frontier: int, feat: int, deg: int,
-                             blocked: bool, seed: int = 0) -> Dict:
-    """Two sampled layers of a synthetic power-graph, device-ready."""
-    from repro.distributed.gcn_train import shard_minibatch
+def _synthetic_layers(batch: int, mid: int, frontier: int, deg: int,
+                      seed: int = 0):
+    """Two sampled layers of a synthetic power-graph (COO, deepest last).
+
+    Generated ONCE per benchmark run and shared by every arm, so all arms
+    aggregate the same graph — and the ELL arm's cached EdgePlan (keyed on
+    the COO identity) is demonstrably built once and reused across all
+    measured steps.
+    """
     from repro.graph.coo import from_edges
 
     rng = np.random.default_rng(seed)
@@ -140,31 +144,55 @@ def _synthetic_sharded_batch(n_cores: int, batch: int, mid: int,
                           + 0.1,
                           n_dst, n_src)
 
-    class _MB:                       # duck-typed MiniBatch: layers only
-        layers = [layer(batch, mid), layer(mid, frontier)]
+    return [layer(batch, mid), layer(mid, frontier)]
 
+
+def _synthetic_sharded_batch(n_cores: int, batch: int, mid: int,
+                             frontier: int, feat: int, deg: int,
+                             layout: str, layers, seed: int = 0,
+                             mesh=None) -> Dict:
+    """Shared synthetic layers → device-ready sharded batch.
+
+    ``mesh`` commits every leaf to its core-axis sharding at build time
+    (placement once per minibatch, not per step).
+    """
+    from repro.distributed.gcn_train import shard_minibatch
+
+    rng = np.random.default_rng(seed + 1)
+
+    class _MB:                       # duck-typed MiniBatch: layers only
+        pass
+
+    _MB.layers = layers
     x = rng.standard_normal((frontier, feat)).astype(np.float32)
     labels = rng.integers(0, 16, batch).astype(np.int32)
-    return shard_minibatch(_MB(), x, labels, n_cores, blocked=blocked)
+    return shard_minibatch(_MB(), x, labels, n_cores, layout=layout,
+                           mesh=mesh)
 
 
 def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
                      frontier: int = 8192, feat: int = 256,
                      hidden: int = 256, deg: int = 16, n_steps: int = 3,
-                     n_trials: int = 12, n_chunks=None, seed: int = 0
-                     ) -> Dict:
-    """Step time of the distributed GCN train step, serial vs pipelined
-    aggregation (identical math — fp32-bit-equal forward — only the layout
-    and issue order differ).  Must run under a multi-device backend.
+                     n_trials: int = 12, n_chunks=None, seed: int = 0,
+                     ell: bool = True) -> Dict:
+    """Step time of the distributed GCN train step: serial vs pipelined
+    (bit-exact Block-Message tiles) vs pre-reduced ELL aggregation.  Must
+    run under a multi-device backend.
 
-    The two arms run back-to-back inside every trial and the reported
-    speedup is the MEDIAN of the per-trial serial/overlap ratios: on
-    shared/oversubscribed hosts (P device threads on few physical cores)
-    absolute step times swing 2-3× with background load, but the load is
-    common-mode across an adjacent pair, so the paired ratio is stable
-    where a ratio-of-minimums is not.  Minimum per-step times are reported
-    alongside for reference.
+    All arms run back-to-back inside every trial and each reported speedup
+    is the MEDIAN of the per-trial serial/arm ratios: on shared/
+    oversubscribed hosts (P device threads on few physical cores) absolute
+    step times swing 2-3× with background load, but the load is common-mode
+    across an adjacent group, so the paired ratio is stable where a
+    ratio-of-minimums is not.  Minimum per-step times are reported
+    alongside for reference.  Every arm's batch is committed to its device
+    sharding at build time (the fix for the recorded
+    ``agg_fwd_speedup < 1`` regression — uncommitted edge arrays were
+    re-laid-out on every step, a cost that grew with the blocked layout's
+    leaf sizes); the ELL arm's EdgePlan is built once, cache-verified, and
+    reused across all measured steps.
     """
+    from repro.distributed.aggregate import shard_edges_ell
     from repro.distributed.gcn_train import init_params, make_train_step
 
     if n_cores & (n_cores - 1):
@@ -180,19 +208,30 @@ def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
                  "frontier": frontier, "feat": feat, "hidden": hidden,
                  "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
                  "n_chunks": n_chunks}
+    variants = [("serial", "flat", {}), ("overlap", "blocked",
+                                         {"overlap": True})]
+    if ell:
+        variants.append(("ell", "ell", {"overlap": True, "ell": True}))
+    layers = _synthetic_layers(batch, mid, frontier, deg, seed)
+    from repro.kernels import edgeplan
+    misses_at_start = edgeplan.cache_stats()["misses"]
     arms = {}
-    for arm, overlap in (("serial", False), ("overlap", True)):
+    for arm, layout, kw in variants:
         b = _synthetic_sharded_batch(n_cores, batch, mid, frontier, feat,
-                                     deg, blocked=overlap, seed=seed)
+                                     deg, layout=layout, layers=layers,
+                                     seed=seed, mesh=mesh)
         params = init_params(jax.random.PRNGKey(seed),
                              [(feat, hidden), (hidden, 16)])
-        step = make_train_step(mesh, b["dims"], lr=0.05, overlap=overlap,
-                               n_chunks=n_chunks)
+        step = make_train_step(mesh, b["dims"], lr=0.05, n_chunks=n_chunks,
+                               **kw)
         params, loss = step(params, b)        # compile
         params, loss = step(params, b)        # warmup
         jax.block_until_ready(loss)
         arms[arm] = {"step": step, "batch": b, "params": params,
                      "loss": float(loss), "times": []}
+    # plan builds for THESE layers: misses added while the arms were set up
+    # (only shard_edges_ell goes through the edgeplan cache)
+    builds_setup = edgeplan.cache_stats()["misses"] - misses_at_start
     for _ in range(n_trials):
         for arm in arms.values():
             t0 = time.perf_counter()
@@ -201,37 +240,59 @@ def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
                 params, loss = arm["step"](params, arm["batch"])
             jax.block_until_ready(loss)
             arm["times"].append((time.perf_counter() - t0) / n_steps)
-    ratios = sorted(s / o for s, o in zip(arms["serial"]["times"],
-                                          arms["overlap"]["times"]))
     out["s_per_step_serial"] = min(arms["serial"]["times"])
-    out["s_per_step_overlap"] = min(arms["overlap"]["times"])
-    out["trial_ratios"] = [round(r, 3) for r in ratios]
     out["loss_serial"] = arms["serial"]["loss"]
-    out["loss_overlap"] = arms["overlap"]["loss"]
-    out["loss_match"] = abs(out["loss_serial"] - out["loss_overlap"]) < 1e-5
-    out["speedup"] = ratios[len(ratios) // 2]         # paired median
+    for arm in arms:
+        if arm == "serial":
+            continue
+        suffix = "" if arm == "overlap" else f"_{arm}"
+        ratios = sorted(s / o for s, o in zip(arms["serial"]["times"],
+                                              arms[arm]["times"]))
+        out[f"s_per_step_{arm}"] = min(arms[arm]["times"])
+        out[f"trial_ratios{suffix}"] = [round(r, 3) for r in ratios]
+        out[f"loss_{arm}"] = arms[arm]["loss"]
+        out[f"loss_match{suffix}"] = abs(out["loss_serial"]
+                                         - arms[arm]["loss"]) < 1e-5
+        out[f"speedup{suffix}"] = ratios[len(ratios) // 2]  # paired median
     out.update(_measured_overlap_aggregate_op(
-        n_cores, mid, frontier, hidden, deg, n_trials * n_steps, seed))
+        n_cores, mid, frontier, hidden, deg, n_trials * n_steps, seed,
+        ell=ell))
+    if ell:
+        # EdgePlan cache proof: the plans the measured steps consumed are
+        # STILL the cached objects — re-requesting every layer's shards
+        # after all timed work must add zero builder misses (a per-step or
+        # per-arm rebuild would have shown up as misses during the runs;
+        # the shard build inside shard_minibatch was the one and only).
+        misses_before = edgeplan.cache_stats()["misses"]
+        for coo in layers:
+            shard_edges_ell(coo, n_cores)
+        out["edge_plan_cached"] = (edgeplan.cache_stats()["misses"]
+                                   == misses_before)
+        out["edge_plan_builds"] = builds_setup     # one per layer expected
     return out
 
 
 def _measured_overlap_aggregate_op(n_cores: int, n_dst: int, n_src: int,
                                    d: int, deg: int, n_pairs: int,
-                                   seed: int) -> Dict:
-    """The hot path in isolation: serial vs pipelined aggregate, forward and
-    forward+backward, paired per call (the serial/pipelined call of a pair
-    run back to back so host-load noise is common-mode).
+                                   seed: int, ell: bool = True) -> Dict:
+    """The hot path in isolation: serial vs pipelined vs pre-reduced ELL
+    aggregate, forward and forward+backward, paired per call (the arms of a
+    pair run back to back so host-load noise is common-mode).
 
-    This is the op the PR pipelines; inside the full train step its
-    backward-allgather savings can hide under unrelated gradient work on an
-    oversubscribed CPU host, so the op-level ratio is reported alongside
-    the step-level one.
+    Inside the full train step the aggregation savings can hide under
+    unrelated gradient work on an oversubscribed CPU host, so the op-level
+    ratios are reported alongside the step-level ones.  All edge arrays are
+    committed to their core-axis sharding up front — what the training
+    pipeline does once per minibatch — so the ratios measure the schedule,
+    not jit's per-call re-layout of uncommitted operands.
     """
     from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed.aggregate import (
-        hypercube_aggregate, hypercube_aggregate_pipelined, shard_edges,
-        shard_edges_blocked)
+        hypercube_aggregate, hypercube_aggregate_ell,
+        hypercube_aggregate_pipelined, shard_edges, shard_edges_blocked,
+        shard_edges_ell)
+    from repro.distributed.sharding import leading_axis_put
     from repro.graph.coo import from_edges
 
     rng = np.random.default_rng(seed)
@@ -240,14 +301,19 @@ def _measured_overlap_aggregate_op(n_cores: int, n_dst: int, n_src: int,
     coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
                      np.abs(rng.standard_normal(e)).astype(np.float32) + 0.1,
                      n_dst, n_src)
-    x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
     mesh = jax.make_mesh((n_cores,), ("model",))
+
+    def commit(a):
+        # the SAME placement rule the train path uses (one transfer,
+        # committed once) — so the benchmark can never measure a layout
+        # the training pipeline doesn't run
+        return leading_axis_put(mesh, a)
+
+    x = commit(rng.standard_normal((n_src, d)).astype(np.float32))
     es = shard_edges(coo, n_cores)
     eb = shard_edges_blocked(coo, n_cores)
-    a_s = (jnp.asarray(es.rows_global), jnp.asarray(es.cols_local),
-           jnp.asarray(es.vals))
-    a_b = (jnp.asarray(eb.rows_local), jnp.asarray(eb.cols_local),
-           jnp.asarray(eb.vals))
+    a_s = tuple(commit(a) for a in (es.rows_global, es.cols_local, es.vals))
+    a_b = tuple(commit(a) for a in (eb.rows_local, eb.cols_local, eb.vals))
     ser = jax.jit(shard_map(
         lambda r, c, v, xl: hypercube_aggregate(
             "model", ndim, n_dst, r[0], c[0], v[0], xl),
@@ -272,17 +338,34 @@ def _measured_overlap_aggregate_op(n_cores: int, n_dst: int, n_src: int,
         rs.sort()
         return rs[len(rs) // 2]
 
-    return {
+    out = {
         "agg_fwd_speedup": paired(ser, (*a_s, x), pip, (*a_b, x)),
         "agg_fwdbwd_speedup": paired(gs, (x,), gp, (x,)),
     }
+    if ell:
+        from repro.distributed.sharding import leading_axis_spec
+        ee = shard_edges_ell(coo, n_cores)
+        tabs = jax.tree_util.tree_map(commit, ee.tables)
+        especs = jax.tree_util.tree_map(leading_axis_spec, tabs)
+        agg_ell = jax.jit(shard_map(
+            lambda t, xl: hypercube_aggregate_ell(
+                "model", ndim, n_dst,
+                jax.tree_util.tree_map(lambda a: a[0], t), xl),
+            mesh=mesh, in_specs=(especs, P("model")),
+            out_specs=P("model")))
+        ge = jax.jit(jax.grad(lambda xx: jnp.sum(agg_ell(tabs, xx) ** 2)))
+        out["agg_fwd_speedup_ell"] = paired(ser, (*a_s, x), agg_ell,
+                                            (tabs, x))
+        out["agg_fwdbwd_speedup_ell"] = paired(gs, (x,), ge, (x,))
+    return out
 
 
 def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
+                    ell: bool = True,
                     out_path: str = "BENCH_overlap.json") -> Dict:
     """Re-exec the overlap measurement under a forced multi-device backend
     (XLA_FLAGS must precede the jax import) and write ``out_path``."""
-    kwargs = {"n_cores": n_cores}
+    kwargs = {"n_cores": n_cores, "ell": ell}
     if smoke:
         kwargs.update(batch=128, mid=256, frontier=512, feat=64, hidden=64,
                       deg=8, n_steps=3)
@@ -309,10 +392,18 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
     print("arm,s_per_step")
     print(f"serial,{rec['s_per_step_serial']:.4f}")
     print(f"overlap,{rec['s_per_step_overlap']:.4f}")
+    if "s_per_step_ell" in rec:
+        print(f"ell,{rec['s_per_step_ell']:.4f}")
     print(f"# train-step speedup {rec['speedup']:.3f}x (paired median)  "
           f"loss_match={rec['loss_match']}")
     print(f"# aggregation-op speedup: fwd {rec['agg_fwd_speedup']:.3f}x  "
           f"fwd+bwd {rec['agg_fwdbwd_speedup']:.3f}x (paired median)")
+    if "speedup_ell" in rec:
+        print(f"# ELL arm: train-step {rec['speedup_ell']:.3f}x  "
+              f"agg fwd {rec['agg_fwd_speedup_ell']:.3f}x  "
+              f"fwd+bwd {rec['agg_fwdbwd_speedup_ell']:.3f}x  "
+              f"loss_match={rec['loss_match_ell']}  "
+              f"plan_cached={rec.get('edge_plan_cached')}")
     print(f"# (wrote {out_path})")
     return rec
 
@@ -325,10 +416,15 @@ def main() -> None:
                     help="toy sizes (CI): implies a quick --overlap run")
     ap.add_argument("--cores", type=int, default=8,
                     help="simulated device count for the overlap arm")
+    ap.add_argument("--ell", action="store_true", default=None,
+                    help="include the pre-reduced ELL arm (default: on)")
+    ap.add_argument("--no-ell", dest="ell", action="store_false",
+                    help="skip the ELL arm")
     args = ap.parse_args()
 
     if args.overlap or args.smoke:
-        run_overlap_arm(args.cores, smoke=args.smoke)
+        run_overlap_arm(args.cores, smoke=args.smoke,
+                        ell=True if args.ell is None else args.ell)
         return
     _table2_main()
 

@@ -2,12 +2,14 @@
 analysis per (arch × shape × mesh): seconds per term, dominant bottleneck,
 MODEL_FLOPS/HLO_FLOPS usefulness ratio, and a one-line lever.
 
-    PYTHONPATH=src python -m benchmarks.roofline [records.json] [--overlap]
+    PYTHONPATH=src python -m benchmarks.roofline [records.json] [--overlap] [--ell]
 
 ``--overlap`` adds the paper's Eq. 9 accounting: a serial schedule pays
 ``t_compute + t_memory + t_collective`` while the double-buffered schedule
 pays ``max(t_collective, t_compute + t_memory)`` — the table then shows the
-per-cell bound on what the pipelined aggregation arm can win.
+per-cell bound on what the pipelined aggregation arm can win.  ``--ell``
+stacks the pre-reduced ELL bound on top (the scatter's read-modify-write
+HBM traffic eliminated — see :func:`ell_rows` for the assumption).
 """
 from __future__ import annotations
 
@@ -69,11 +71,37 @@ def overlap_rows(rows: List[Dict]) -> List[Dict]:
     return out
 
 
+def ell_rows(orows: List[Dict], scatter_frac: float = 0.3) -> List[Dict]:
+    """Pre-reduced ELL bound on top of the Eq. 9 overlap bound.
+
+    The ELL engine replaces the aggregation's segment-sum scatter with a
+    gather + degree-axis reduction: the scatter's read-modify-write HBM
+    traffic (it touches every accumulator row twice) disappears.
+    ``scatter_frac`` is the assumed share of the memory term that is
+    scatter RMW traffic; eliminating the read half of it scales the memory
+    term by ``(1 - scatter_frac/2)``.  This is an ANALYTIC bound arm — the
+    measured counterpart is ``epoch_time --overlap``'s ELL arm.
+    """
+    out = []
+    for r in orows:
+        mem_ell = r["t_memory_ms"] * (1 - scatter_frac / 2)
+        t_ell = max(r["t_collective_ms"], r["t_compute_ms"] + mem_ell)
+        out.append({**r, "t_ell_ms": t_ell,
+                    "ell_gain": r["t_serial_ms"] / max(t_ell, 1e-12)})
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("records", nargs="?", default=DEFAULT)
     ap.add_argument("--overlap", action="store_true",
                     help="add Eq. 9 overlapped-schedule bound per cell")
+    ap.add_argument("--ell", action="store_true",
+                    help="add the pre-reduced ELL (scatter-free) bound on "
+                         "top of the overlap bound")
+    ap.add_argument("--scatter-frac", type=float, default=0.3,
+                    help="assumed scatter-RMW share of the memory term "
+                         "the ELL engine eliminates")
     args = ap.parse_args()
     records = load(args.records)
     for mesh in ("16x16", "2x16x16"):
@@ -95,7 +123,7 @@ def main() -> None:
         for k, v in LEVERS.items():
             if doms.get(k):
                 print(f"# {k}-bound lever: {v}")
-        if args.overlap:
+        if args.overlap or args.ell:
             print(f"## mesh {mesh} — Eq. 9 overlap bound "
                   "(serial=sum, overlapped=max(wire, MAC+HBM))")
             print("arch,shape,t_serial_ms,t_overlap_ms,overlap_gain")
@@ -107,6 +135,19 @@ def main() -> None:
             print(f"# best overlap win: {best['arch']}×{best['shape']} "
                   f"{best['overlap_gain']:.2f}x — the pipelined aggregation "
                   "arm (epoch_time --overlap) realizes this bound")
+        if args.ell:
+            print(f"## mesh {mesh} — pre-reduced ELL bound "
+                  f"(scatter RMW share {args.scatter_frac:.0%} of HBM term "
+                  "eliminated)")
+            print("arch,shape,t_overlap_ms,t_ell_ms,ell_gain")
+            erows = ell_rows(orows, args.scatter_frac)
+            for r in sorted(erows, key=lambda r: -r["ell_gain"]):
+                print(f"{r['arch']},{r['shape']},{r['t_overlap_ms']:.2f},"
+                      f"{r['t_ell_ms']:.2f},{r['ell_gain']:.3f}")
+            best = max(erows, key=lambda r: r["ell_gain"])
+            print(f"# best ELL win: {best['arch']}×{best['shape']} "
+                  f"{best['ell_gain']:.2f}x — the ELL arm "
+                  "(epoch_time --overlap --ell) measures this")
 
 
 if __name__ == "__main__":

@@ -3,37 +3,58 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
     PYTHONPATH=src python -m benchmarks.run --smoke   # CI: toy sizes + JSON
 
-``--smoke`` is the CI arm: it exercises the pipelined-aggregation overlap
-path at toy sizes (4 simulated cores), sanity-runs the block-layout SpMM
-kernel against its oracle, and writes ``BENCH_smoke.json`` +
-``BENCH_overlap.json`` for the workflow to upload as artifacts.
+``--smoke`` is the CI arm: it autotunes the ELL engine (winner persisted to
+``BENCH_autotune.json``), exercises the overlap + pre-reduced-ELL
+aggregation arms at toy sizes (4 simulated cores), sanity-runs the
+block-layout and ELL SpMM kernels against their oracle, diffs the fresh
+record against the previous ``BENCH_smoke.json`` (warn-only), and writes
+``BENCH_smoke.json`` + ``BENCH_overlap.json`` for the workflow to upload
+as artifacts.  The smoke FAILS if the ELL arm's aggregation speedups drop
+to ≤1.0 — no regression arm ships.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 
 def smoke() -> int:
-    """Toy-size benchmark smoke: overlap arm + kernel sanity, JSON out."""
+    """Toy-size benchmark smoke: autotune + overlap/ELL arms + kernel
+    sanity, JSON out, regression diff vs the previous record."""
     t_start = time.time()
     rec = {"mode": "smoke"}
+    prev = None
+    if os.path.exists("BENCH_smoke.json"):     # snapshot BEFORE overwriting
+        try:
+            with open("BENCH_smoke.json") as f:
+                prev = json.load(f)
+        except ValueError:
+            prev = None
 
-    print(f"\n{'=' * 72}\npipelined aggregation — overlap arm (toy)\n"
+    print(f"\n{'=' * 72}\nELL autotune (bucket scheme + tiles)\n{'=' * 72}")
+    from repro.kernels import tune
+    tune_rec = tune.autotune(n=256, deg=6, d=32, n_reps=3)
+    rec["autotune"] = {"backend": tune_rec["backend"],
+                       "config": tune_rec["config"],
+                       "path": tune.cache_path()}
+    print(f"config: {tune_rec['config']}  (wrote {tune.cache_path()})")
+
+    print(f"\n{'=' * 72}\npipelined aggregation — overlap + ELL arms (toy)\n"
           f"{'=' * 72}")
     from benchmarks.epoch_time import run_overlap_arm
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 
-    print(f"\n{'=' * 72}\nblock-layout SpMM kernel vs oracle (interpret)\n"
-          f"{'=' * 72}")
+    print(f"\n{'=' * 72}\nSpMM kernels vs oracle (interpret)\n{'=' * 72}")
     import numpy as np
     import jax.numpy as jnp
     from repro.core.blockmsg import dst_tiles
     from repro.graph.coo import from_edges
     from repro.graph.partition import block_partition
-    from repro.kernels.ops import spmm_block
+    from repro.kernels import edgeplan
+    from repro.kernels.ops import ell_apply, spmm_block
     from repro.kernels.ref import spmm_ref
 
     rng = np.random.default_rng(0)
@@ -42,21 +63,46 @@ def smoke() -> int:
                      rng.standard_normal(e).astype(np.float32), n_dst, n_src)
     tiles = dst_tiles(block_partition(coo, 4))
     x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+    ref = np.asarray(spmm_ref(coo.rows, coo.cols, coo.vals, x, n_dst))
     t0 = time.time()
     y = spmm_block(jnp.asarray(tiles.rows), jnp.asarray(tiles.cols),
                    jnp.asarray(tiles.vals), x, tiles.dst_per_core)
-    err = float(np.abs(np.asarray(y)
-                       - np.asarray(spmm_ref(coo.rows, coo.cols, coo.vals,
-                                             x, n_dst))).max())
+    err = float(np.abs(np.asarray(y) - ref).max())
     rec["spmm_block"] = {"max_abs_err": err, "s": time.time() - t0,
                         "n_dst": n_dst, "n_src": n_src, "d": d, "e": e}
-    print(f"max |err| = {err:.2e}  ({rec['spmm_block']['s']:.1f}s)")
+    print(f"spmm_block max |err| = {err:.2e}  ({rec['spmm_block']['s']:.1f}s)")
+
+    t0 = time.time()
+    plan = edgeplan.build_plan(coo)
+    y_ell = ell_apply(plan.device_tables(), x, use_pallas=True)
+    err_ell = float(np.abs(np.asarray(y_ell) - ref).max())
+    rec["spmm_ell"] = {"max_abs_err": err_ell, "s": time.time() - t0,
+                       "compression": plan.compression,
+                       "padding_overhead": plan.padding_overhead,
+                       "caps": list(plan.fwd.caps)}
+    print(f"spmm_ell   max |err| = {err_ell:.2e}  "
+          f"(compression {plan.compression:.2f}x, "
+          f"padding {plan.padding_overhead:.2f}x, "
+          f"{rec['spmm_ell']['s']:.1f}s)")
 
     rec["total_s"] = time.time() - t_start
     with open("BENCH_smoke.json", "w") as f:
         json.dump(rec, f, indent=1)
     print(f"\nwrote BENCH_smoke.json ({rec['total_s']:.1f}s total)")
-    ok = err < 1e-4 and rec["overlap"]["loss_match"]
+    if prev is not None:
+        from benchmarks.compare import compare_records, print_report
+        rows, regressions = compare_records(prev, rec)
+        print_report(rows, regressions, 0.10)   # warn-only in CI for now
+    ov = rec["overlap"]
+    # direct indexing on purpose: the ELL arm always runs in smoke, and a
+    # renamed/missing metric must be a loud KeyError, not a silently
+    # disabled gate
+    ok = (err < 1e-4 and err_ell < 1e-4 and ov["loss_match"]
+          and ov["loss_match_ell"]
+          # the acceptance gate: no regression arm ships — the ELL engine
+          # must beat the serial schedule on its own hot path
+          and ov["agg_fwd_speedup_ell"] > 1.0
+          and ov["agg_fwdbwd_speedup_ell"] > 1.0)
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -2,7 +2,7 @@
 # (gcn.py vs baseline.py, chosen by estimator.py) + the 4-D hypercube
 # parallel-multicast message-passing layer (routing.py, blockmsg.py,
 # schedule.py).
-from .gcn import gcn_layer, residual_bytes
+from .gcn import gcn_layer, gcn_layer_blocked, gcn_layer_ell, residual_bytes
 from .baseline import gcn_layer_baseline, residual_bytes_naive
 from .estimator import (CostEstimate, LayerShape, choose_order,
                         layer_shapes_for_batch, storage_naive, storage_ours,
@@ -11,20 +11,21 @@ from .routing import (RoutingResult, aggregate_bandwidth_model,
                       fuse_experiment, make_fuse_wave, route_messages,
                       validate_routing, xor_path_set)
 from .blockmsg import (BlockMessage, Wave, build_waves, compress_block,
+                       message_rowlists, sender_merge_flat,
                        wave_statistics)
 from .schedule import (AggregationPlan, Round, allgather_rounds,
                        compare_schedules, dimension_ordered_table, make_plan,
                        reduce_scatter_rounds, round_bytes)
 
 __all__ = [
-    "gcn_layer", "residual_bytes",
+    "gcn_layer", "gcn_layer_blocked", "gcn_layer_ell", "residual_bytes",
     "gcn_layer_baseline", "residual_bytes_naive",
     "CostEstimate", "LayerShape", "choose_order", "layer_shapes_for_batch",
     "storage_naive", "storage_ours", "time_naive", "time_ours",
     "RoutingResult", "aggregate_bandwidth_model", "fuse_experiment",
     "make_fuse_wave", "route_messages", "validate_routing", "xor_path_set",
     "BlockMessage", "Wave", "build_waves", "compress_block",
-    "wave_statistics",
+    "message_rowlists", "sender_merge_flat", "wave_statistics",
     "AggregationPlan", "Round", "allgather_rounds", "compare_schedules",
     "dimension_ordered_table", "make_plan", "reduce_scatter_rounds",
     "round_bytes",

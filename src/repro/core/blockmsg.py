@@ -68,6 +68,41 @@ def compress_block(local_rows: np.ndarray, local_cols: np.ndarray,
     )
 
 
+def message_rowlists(bm: BlockMessage):
+    """Iterate one Block Message's merge plan: ``(B, D_slots, weights)`` per
+    wire message — the neighbors the Reduced Register File pre-reduces into
+    a single payload.  ``seg_ids`` is seg-sorted, so each message's edges
+    are one contiguous slice."""
+    bounds = np.flatnonzero(np.diff(bm.seg_ids)) + 1
+    for b, d_slots, w in zip(bm.agg_slots, np.split(bm.nbr_slots, bounds),
+                             np.split(bm.weights, bounds)):
+        yield int(b), d_slots, w
+
+
+def sender_merge_flat(blocked, src_core: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """All of one sender's edges in pre-reduction order, global row ids.
+
+    Runs the Index Compressor (:func:`compress_block`) on every block of
+    column ``src_core`` and concatenates the merge-ordered edges with rows
+    lifted to the global partial-row space (``dst_core·dpc + B``) and cols
+    kept sender-local (the D slots).  This is the flat input
+    :mod:`repro.kernels.edgeplan` bucketizes into the sender's ELL tables.
+    """
+    from repro.graph.partition import sender_blocks
+    from repro.kernels.edgeplan import flat_from_compressed
+
+    dpc = blocked.dst_per_core
+    parts = [flat_from_compressed(
+        compress_block(lr, lc, v, dst_core=i, src_core=src_core),
+        row_offset=i * dpc)
+        for i, (lr, lc, v) in sender_blocks(blocked, src_core)]
+    if not parts:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), np.zeros(0, np.float32)
+    return tuple(np.concatenate(a) for a in zip(*parts))
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockTiles:
     """Dense padded per-destination-block COO tiles of ONE sender core.

@@ -207,6 +207,35 @@ def gcn_layer_blocked(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
                             order, activate, rows_b, cols_b, vals_b, x, w)
 
 
+# ---------------------------------------------------------------------------
+# Pre-reduced ELL variant: aggregation through the EdgePlan engine.
+# ---------------------------------------------------------------------------
+def gcn_layer_ell(plan, x: jnp.ndarray, w: jnp.ndarray, *,
+                  order: Order = "coag", activate: bool = True
+                  ) -> jnp.ndarray:
+    """GCN layer whose aggregation runs the pre-reduced ELL engine.
+
+    ``plan`` is :func:`repro.kernels.edgeplan.build_plan` output (built once
+    per graph, cached).  Aggregation — forward AND backward — goes through
+    :func:`repro.kernels.ops.ell_aggregate`: the backward walks the plan's
+    column-major tables with the same scatter-free kernel, so this layer
+    inherits the transpose-free backward from the ops wrapper instead of
+    re-registering its own vjp.
+    """
+    from repro.kernels.ops import ell_aggregate
+
+    if x.shape[0] != plan.n_src:
+        raise ValueError(f"x rows {x.shape[0]} != plan.n_src {plan.n_src}")
+    tables = plan.device_tables()
+    if order == "coag":
+        z = ell_aggregate(tables, x @ w)
+    elif order == "agco":
+        z = ell_aggregate(tables, x) @ w
+    else:
+        raise ValueError(order)
+    return jnp.maximum(z, 0.0) if activate else z
+
+
 def residual_bytes(order: Order, n_dst: int, n_src: int, d: int, h: int,
                    dtype_bytes: int = 4) -> int:
     """Storage the 'Ours' dataflow saves for backward (per layer): the

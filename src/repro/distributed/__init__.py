@@ -2,18 +2,20 @@
 # shard_map/ppermute (aggregate.py), PartitionSpec rules (sharding.py), and
 # the at-scale tricks the 1000-node deployment needs (compress.py,
 # overlap.py).
-from .aggregate import (EdgeShards, hypercube_aggregate, hypercube_allgather,
+from .aggregate import (EdgeShards, EllEdgeShards, hypercube_aggregate,
+                        hypercube_aggregate_ell, hypercube_allgather,
                         hypercube_reduce_scatter, schedule_bytes, shard_edges,
-                        shard_edges_by_dst, uma_aggregate)
+                        shard_edges_by_dst, shard_edges_ell, uma_aggregate)
 from .compress import (compressed_psum, compression_ratio, ef_compress_grads,
                        init_error_state)
 from .overlap import grad_accum
 from . import sharding
 
 __all__ = [
-    "EdgeShards", "hypercube_aggregate", "hypercube_allgather",
+    "EdgeShards", "EllEdgeShards", "hypercube_aggregate",
+    "hypercube_aggregate_ell", "hypercube_allgather",
     "hypercube_reduce_scatter", "schedule_bytes", "shard_edges",
-    "shard_edges_by_dst", "uma_aggregate",
+    "shard_edges_by_dst", "shard_edges_ell", "uma_aggregate",
     "compressed_psum", "compression_ratio", "ef_compress_grads",
     "init_error_state", "grad_accum", "sharding",
 ]

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -349,27 +349,22 @@ def _local_partials_blocked(rows_b, cols_b, vals_b, x_local, dpc: int):
     return out.reshape(n_blocks, dpc, -1)
 
 
-def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
-                        n_chunks: int, rows_b, cols_b, vals_b, x_local):
-    """Fused local SpMM + double-buffered fold.
+def _fold_pipelined(axis_name: str, ndim: int, n_chunks: int,
+                    partials_fn, x_local):
+    """Fused local SpMM + double-buffered fold, layout-agnostic.
 
-    Per feature wave the SpMM for the half-cube this device does NOT own is
-    computed first and its round-(ndim-1) ``ppermute`` issued immediately;
-    the SpMM for the still-owned half then runs while that first transfer
-    is on the wire (paper §4.3, Fig. 9 — message passing overlapped with
-    MAC work).  The remaining rounds use the double-buffered fold.
+    ``partials_fn(x_chunk) -> [P, dpc, dc]`` is the local pre-reduction for
+    one feature wave — the Block-Message tile scatter or the pre-reduced
+    ELL gather; the fold around it is identical.  Per feature wave the SpMM
+    for the half-cube this device does NOT own is computed first and its
+    round-(ndim-1) ``ppermute`` issued immediately; the SpMM for the
+    still-owned half then runs while that first transfer is on the wire
+    (paper §4.3, Fig. 9 — message passing overlapped with MAC work).  The
+    remaining rounds use the double-buffered fold.
     """
     n_cores = 1 << ndim
-    dpc = n_dst // n_cores
-    if rows_b.shape[0] != n_cores:
-        # fail loudly: dynamic_slice would CLAMP an out-of-range start and
-        # silently duplicate blocks into both 'mine' and 'send'
-        raise ValueError(
-            f"tile count {rows_b.shape[0]} != 2^ndim = {n_cores}; edge "
-            "arrays must come from shard_edges_blocked on the same mesh")
     if ndim == 0:
-        return _local_partials_blocked(rows_b, cols_b, vals_b, x_local,
-                                       dpc)[0]
+        return partials_fn(x_local)[0]
     idx = jax.lax.axis_index(axis_name)
     waves = feature_waves(x_local.shape[-1], n_chunks)
     b0 = ndim - 1                     # top bit: the first fold round
@@ -381,7 +376,7 @@ def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
         xc = jax.lax.slice_in_dim(x_local, w.start, w.stop, axis=-1)
         # wave k's SpMM runs while wave k-1's send (issued below, consumed
         # only after the loop) is on the wire — the ping-pong buffer
-        p = _local_partials_blocked(rows_b, cols_b, vals_b, xc, dpc)
+        p = partials_fn(xc)
         send = jax.lax.dynamic_slice_in_dim(p, (1 - my_bit0) * half,
                                             half, 0)
         recvs.append(jax.lax.ppermute(send, axis_name, perm0))
@@ -404,6 +399,23 @@ def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
             bufs, split,
             lambda s, perm=perm: jax.lax.ppermute(s, axis_name, perm))
     return jnp.concatenate([b[0] for b in bufs], axis=-1)   # [dpc, d]
+
+
+def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
+                        n_chunks: int, rows_b, cols_b, vals_b, x_local):
+    """Block-tile partials through the shared pipelined fold."""
+    n_cores = 1 << ndim
+    dpc = n_dst // n_cores
+    if rows_b.shape[0] != n_cores:
+        # fail loudly: dynamic_slice would CLAMP an out-of-range start and
+        # silently duplicate blocks into both 'mine' and 'send'
+        raise ValueError(
+            f"tile count {rows_b.shape[0]} != 2^ndim = {n_cores}; edge "
+            "arrays must come from shard_edges_blocked on the same mesh")
+    return _fold_pipelined(
+        axis_name, ndim, n_chunks,
+        lambda xc: _local_partials_blocked(rows_b, cols_b, vals_b, xc, dpc),
+        x_local)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
@@ -471,6 +483,158 @@ def hypercube_aggregate_pipelined(axis_name: str, ndim: int, n_dst: int,
     return _hypercube_aggregate_pipelined(axis_name, ndim, n_dst,
                                           int(n_chunks), rows_b, cols_b,
                                           vals_b, x_local)
+
+
+# ---------------------------------------------------------------------------
+# Pre-reduced ELL edge shards + the scatter-free pipelined aggregate.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EllEdgeShards:
+    """Per-sender pre-reduced ELL plans, stacked for ``shard_map``.
+
+    ``tables`` mirrors :meth:`repro.kernels.edgeplan.EdgePlan.device_tables`
+    with every leaf stacked on a leading core axis: ``cols``/``vals`` are
+    per-bucket ``[P, nb, K]`` tables over the GLOBAL partial-row space
+    (``dst_core·dpc + B``) with sender-local source slots, ``inv`` is
+    ``[P, n_dst]``, and the ``t_*`` leaves are the column-major mirror
+    (rows = sender-local source slots, columns = global error rows).
+    Bucket capacities and per-bucket row counts are shared across senders so
+    every device sees identical shapes.  Built once per graph and cached.
+    """
+
+    tables: Dict
+    n_dst: int
+    n_src: int
+    n_cores: int
+
+    @property
+    def dst_per_core(self) -> int:
+        return self.n_dst // self.n_cores
+
+    @property
+    def src_per_core(self) -> int:
+        return self.n_src // self.n_cores
+
+
+def _stack_sender_tables(flats, n_rows: int, n_cols: int, caps) -> Dict:
+    """Per-sender flat edges → shape-aligned stacked ELL tables (one
+    direction).  Two passes: degrees fix the shared capacities and the
+    per-bucket row pads, then every sender builds against them."""
+    from repro.kernels import edgeplan
+
+    degs = [edgeplan.merged_degrees(r, c, v, n_rows, n_cols)
+            for (r, c, v) in flats]
+    max_deg = max((int(d.max()) for d in degs if d.size), default=0)
+    caps_t = edgeplan.resolve_caps(caps, max_deg)
+    caps_arr = np.asarray(caps_t, np.int64)
+    nb_pad = np.zeros(len(caps_t), np.int64)
+    for d in degs:
+        listed = d[d > 0]
+        counts = np.bincount(np.searchsorted(caps_arr, listed, side="left"),
+                             minlength=len(caps_t))
+        nb_pad = np.maximum(nb_pad, counts)
+    tabs = [edgeplan.build_tables(r, c, v, n_rows, n_cols, caps=caps_t,
+                                  nb_pad=nb_pad.tolist())
+            for (r, c, v) in flats]
+    keep = [b for b in range(len(caps_t)) if nb_pad[b] > 0]
+    return {
+        "cols": tuple(np.stack([t.cols[b] for t in tabs]) for b in keep),
+        "vals": tuple(np.stack([t.vals[b] for t in tabs]) for b in keep),
+        "inv": np.stack([t.inv_perm for t in tabs]),
+    }
+
+
+def shard_edges_ell(coo: COO, n_cores: int, caps=None) -> EllEdgeShards:
+    """Partition a (padded) COO into per-sender pre-reduced ELL plans.
+
+    Same source-core striping as :func:`shard_edges`, but each sender's
+    edges go through the Index Compressor
+    (:func:`repro.core.blockmsg.sender_merge_flat` — ``compress_block`` per
+    block) and land as degree-bucketed ELL tables: the local pre-reduction
+    becomes a gather + degree-axis reduction with NO segment-sum scatter,
+    forward and backward.  Built once per (graph, mesh) and cached on the
+    COO's identity — per-step host edge prep disappears.
+    """
+    from repro.core.blockmsg import sender_merge_flat
+    from repro.kernels import edgeplan
+
+    if caps is None:
+        from repro.kernels.tune import get_config
+        caps = get_config()["caps"]
+    caps_key = caps if isinstance(caps, str) else tuple(caps)
+
+    def _build() -> EllEdgeShards:
+        blocked = block_partition(coo, n_cores)
+        spc = blocked.src_per_core
+        fwd_flats = [sender_merge_flat(blocked, j) for j in range(n_cores)]
+        bwd_flats = [(c, r, v) for (r, c, v) in fwd_flats]
+        fwd = _stack_sender_tables(fwd_flats, coo.n_dst, spc, caps)
+        bwd = _stack_sender_tables(bwd_flats, spc, coo.n_dst, caps)
+        tables = dict(fwd)
+        tables["t_cols"] = bwd["cols"]
+        tables["t_vals"] = bwd["vals"]
+        tables["t_inv"] = bwd["inv"]
+        return EllEdgeShards(tables=tables, n_dst=coo.n_dst,
+                             n_src=coo.n_src, n_cores=n_cores)
+
+    return edgeplan.cached(
+        edgeplan.coo_key(coo, "ell-shards", n_cores, caps_key),
+        (coo.rows, coo.cols, coo.vals), _build)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _hypercube_aggregate_ell(axis_name: str, ndim: int, n_dst: int,
+                             n_chunks: int, tables, x_local):
+    from repro.kernels.ops import ell_apply
+
+    n_cores = 1 << ndim
+    dpc = n_dst // n_cores
+    return _fold_pipelined(
+        axis_name, ndim, n_chunks,
+        lambda xc: ell_apply(tables, xc).reshape(n_cores, dpc, -1),
+        x_local)
+
+
+def _ell_fwd(axis_name, ndim, n_dst, n_chunks, tables, x_local):
+    y = _hypercube_aggregate_ell(axis_name, ndim, n_dst, n_chunks, tables,
+                                 x_local)
+    return y, tables        # aggregation is linear in x: plan-only residual
+
+
+def _ell_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
+    from repro.kernels.ops import _zero_ct, ell_apply
+
+    tables = res
+    # mirror schedule, same waves: all-gather the error rows double-buffered
+    e_full = hypercube_allgather_pipelined(ct, axis_name, ndim, n_chunks)
+    # then the column-major ELL walk of the SAME plan — scatter-free Aᵀ
+    dx_local = ell_apply(tables, e_full.reshape(n_dst, -1), transpose=True)
+    return (_zero_ct(tables), dx_local)
+
+
+_hypercube_aggregate_ell.defvjp(_ell_fwd, _ell_bwd)
+
+
+def hypercube_aggregate_ell(axis_name: str, ndim: int, n_dst: int,
+                            tables: Dict, x_local: jnp.ndarray,
+                            n_chunks: Optional[int] = None) -> jnp.ndarray:
+    """Per-device body: ``y_local = (A @ x)_local`` through the pre-reduced
+    ELL engine + the double-buffered hypercube fold.
+
+    ``tables`` is this device's :class:`EllEdgeShards` slice (leading core
+    axis already stripped).  The local pre-reduction is the sender-side
+    Block-Message merge MATERIALIZED: gather + degree-axis reduction, no
+    segment-sum scatter — and the backward (registered here, inherited by
+    the train step) all-gathers the error in mirror order and walks the
+    same plan's column-major tables with the same scatter-free kernel.
+    Matches :func:`hypercube_aggregate` to fp32 roundoff (≤1e-5; the merge
+    reorders additions, so bit-exactness is not the contract — the blocked
+    path keeps that role).
+    """
+    if n_chunks is None:
+        n_chunks = default_n_chunks()
+    return _hypercube_aggregate_ell(axis_name, ndim, n_dst, int(n_chunks),
+                                    tables, x_local)
 
 
 def shard_edges_by_dst(coo: COO, n_cores: int,

@@ -35,62 +35,110 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.graph.sampler import MiniBatch
-from .aggregate import (hypercube_aggregate, hypercube_aggregate_pipelined,
-                        shard_edges, shard_edges_blocked)
+from .aggregate import (hypercube_aggregate, hypercube_aggregate_ell,
+                        hypercube_aggregate_pipelined, shard_edges,
+                        shard_edges_blocked, shard_edges_ell)
 
 Params = List[Dict[str, jnp.ndarray]]
 
 
 def shard_minibatch(mb: MiniBatch, features: np.ndarray, labels: np.ndarray,
-                    n_cores: int, *, blocked: bool = False) -> Dict[str, Any]:
+                    n_cores: int, *, blocked: bool = False,
+                    layout: Optional[str] = None,
+                    mesh: Optional[Mesh] = None,
+                    axis: str = "model") -> Dict[str, Any]:
     """Host-side: sampled minibatch → device-ready sharded arrays.
 
     Layers come deepest-first (matching forward consumption order); features
     are the frontier rows (already padded to a multiple of P).
 
-    ``blocked=True`` ships the Block-Message tile layout
-    ([P, B, eb] per-destination-block arrays, :func:`shard_edges_blocked`)
-    that the pipelined/overlapped aggregation consumes; the default flat
-    layout feeds the serial schedule."""
-    if blocked:
+    ``layout`` selects the edge format per layer:
+
+    * ``"flat"`` (default) — [P, e_max] global-row COO, serial schedule;
+    * ``"blocked"`` (or the legacy ``blocked=True``) — Block-Message tiles
+      ([P, B, eb], :func:`shard_edges_blocked`) for the bit-exact pipelined
+      schedule;
+    * ``"ell"`` — pre-reduced degree-bucketed ELL plans
+      (:func:`shard_edges_ell`, cached per graph) for the scatter-free
+      engine; pair with ``make_train_step(overlap=True, ell=True)``.
+
+    Pass ``mesh`` to commit every batch leaf to its core-axis
+    :class:`~jax.sharding.NamedSharding` once, at build time.  Uncommitted
+    arrays get re-laid-out by jit on EVERY step — per-step overhead that
+    grows with the leaf count and was the measured cause of the blocked
+    arm's ``agg_fwd_speedup < 1`` regression.  Host edge prep + placement
+    then happen once per minibatch, never per step.
+    """
+    if layout is None:
+        layout = "blocked" if blocked else "flat"
+    if mesh is not None:
+        # one transfer per leaf: numpy -> its NamedSharding directly (an
+        # asarray-then-device_put would copy everything host->device twice)
+        from .sharding import leading_axis_put
+
+        def put(a):
+            return leading_axis_put(mesh, a, axis)
+    else:
+        put = jnp.asarray
+    if layout == "ell":
+        shards = [shard_edges_ell(coo, n_cores) for coo in mb.layers]
+        edges = [jax.tree_util.tree_map(put, es.tables) for es in shards]
+    elif layout == "blocked":
         shards = [shard_edges_blocked(coo, n_cores) for coo in mb.layers]
         edges = [
-            {"rows": jnp.asarray(es.rows_local),
-             "cols": jnp.asarray(es.cols_local),
-             "vals": jnp.asarray(es.vals)}
+            {"rows": put(es.rows_local),
+             "cols": put(es.cols_local),
+             "vals": put(es.vals)}
+            for es in shards
+        ]
+    elif layout == "flat":
+        shards = [shard_edges(coo, n_cores) for coo in mb.layers]
+        edges = [
+            {"rows": put(es.rows_global),
+             "cols": put(es.cols_local),
+             "vals": put(es.vals)}
             for es in shards
         ]
     else:
-        shards = [shard_edges(coo, n_cores) for coo in mb.layers]
-        edges = [
-            {"rows": jnp.asarray(es.rows_global),
-             "cols": jnp.asarray(es.cols_local),
-             "vals": jnp.asarray(es.vals)}
-            for es in shards
-        ]
+        raise ValueError(f"unknown layout {layout!r}")
     return {
         "edges": edges,
         "dims": [(es.n_dst, es.n_src) for es in shards],
-        "x": jnp.asarray(features, jnp.float32),
-        "labels": jnp.asarray(labels, jnp.int32),
+        "x": put(np.asarray(features, np.float32)),
+        "labels": put(np.asarray(labels, np.int32)),
     }
 
 
 def _forward_local(params, edges, dims, x_local, ndim: int,
                    axis: str = "model", overlap: bool = False,
-                   n_chunks: Optional[int] = None):
+                   n_chunks: Optional[int] = None, ell: bool = False):
     """Per-device 2..L-layer GCN forward, deepest layer first (CoAg).
 
     ``overlap=True`` expects the Block-Message tile layout per layer and
     runs the double-buffered aggregation (bit-equal values, pipelined
-    issue order)."""
+    issue order); ``ell=True`` expects the pre-reduced ELL plan layout and
+    runs the scatter-free engine under the same pipelined fold."""
     h = x_local
     n_layers = len(params)
     for l in range(n_layers - 1, -1, -1):
         e = edges[l]
         n_dst, _ = dims[l]
         h = h @ params[n_layers - 1 - l]["w"]          # local combination
-        if overlap:
+        if ell:
+            lead = jax.tree_util.tree_leaves(e)[0].shape[0]
+            if lead != 1:
+                # fail loudly: stripping [0] below would silently drop the
+                # other senders' tables (the blocked path's tile-count
+                # guard, re-established for the ELL layout)
+                raise ValueError(
+                    f"ELL edge tables hold {lead} senders per device; the "
+                    "batch was built for a different core count than this "
+                    "mesh — rebuild with shard_minibatch(..., n_cores="
+                    "mesh core count)")
+            tables = jax.tree_util.tree_map(lambda a: a[0], e)
+            h = hypercube_aggregate_ell(axis, ndim, n_dst, tables, h,
+                                        n_chunks)
+        elif overlap:
             h = hypercube_aggregate_pipelined(
                 axis, ndim, n_dst, e["rows"][0], e["cols"][0], e["vals"][0],
                 h, n_chunks)
@@ -105,14 +153,18 @@ def _forward_local(params, edges, dims, x_local, ndim: int,
 
 def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
                     lr: float = 0.05, axis: str = "model", *,
-                    overlap: bool = False, n_chunks: Optional[int] = None):
+                    overlap: bool = False, n_chunks: Optional[int] = None,
+                    ell: bool = False):
     """Build the jitted distributed train step for fixed layer dims.
 
     step(params, batch) -> (params, loss); params replicated, batch arrays
     sharded on their leading (core) axis.  ``overlap=True`` selects the
     pipelined aggregation (pass ``blocked=True`` to
     :func:`shard_minibatch`); forward AND backward then run the
-    double-buffered schedule (the backward in mirror order).
+    double-buffered schedule (the backward in mirror order).  ``ell=True``
+    (pass ``layout="ell"``) runs the pre-reduced scatter-free engine under
+    the same pipelined schedule, inheriting its transpose-free backward
+    from :func:`repro.kernels.ops.ell_aggregate`'s registration.
     """
     n_cores = mesh.shape[axis]
     ndim = int(np.log2(n_cores))
@@ -121,7 +173,7 @@ def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
     def body(params, edges, x_local, labels_local):
         def loss_fn(params):
             logits = _forward_local(params, edges, dims, x_local, ndim,
-                                    axis, overlap, n_chunks)
+                                    axis, overlap, n_chunks, ell)
             logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
             nll = -jnp.take_along_axis(logp, labels_local[:, None],
                                        axis=-1)[:, 0]
@@ -135,16 +187,17 @@ def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
                                         grads)
         return params, loss
 
-    nd = 3 if overlap else 2        # [P, B, eb] tiles vs [P, e_max] flat
-    espec = P(axis, *([None] * (nd - 1)))
-    edge_spec = {"rows": espec, "cols": espec, "vals": espec}
-
     def step(params, batch):
-        n_layers = len(batch["edges"])
+        # every edge leaf is stacked per core on its leading axis — derive
+        # the spec tree from the batch itself (works for all three layouts,
+        # including the ELL plan's bucketed table pytree)
+        from .sharding import leading_axis_spec
+        edge_specs = jax.tree_util.tree_map(
+            lambda a: leading_axis_spec(a, axis), batch["edges"])
         fn = shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(), [edge_spec] * n_layers, P(axis, None), P(axis)),
+            in_specs=(P(), edge_specs, P(axis, None), P(axis)),
             out_specs=(P(), P()),
         )
         return fn(params, batch["edges"], batch["x"], batch["labels"])

@@ -103,3 +103,25 @@ def gcn_weights(mesh: Mesh) -> P:
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
+
+
+def leading_axis_spec(a, axis: str = MODEL) -> P:
+    """Spec of a per-core-stacked host artifact: leading axis over ``axis``,
+    everything else replicated — the rule every edge layout (flat COO tile,
+    Block-Message tile, pre-reduced ELL table/inv leaf) shares."""
+    return P(axis, *([None] * (a.ndim - 1)))
+
+
+def leading_axis_put(mesh: Mesh, a, axis: str = MODEL):
+    """Commit one per-core-stacked leaf to its sharding in ONE transfer.
+
+    This placement-at-build-time is load-bearing: jit re-lays-out
+    uncommitted operands on EVERY call, which was the measured cause of the
+    blocked arm's ``agg_fwd_speedup < 1`` regression.  Train path and
+    benchmarks must place leaves through this one helper so they can never
+    measure different placements.
+    """
+    import numpy as np
+
+    a = np.asarray(a)
+    return jax.device_put(a, NamedSharding(mesh, leading_axis_spec(a, axis)))

@@ -93,6 +93,19 @@ def block_partition(coo: COO, n_cores: int) -> BlockedCOO:
                       block_edges=block_edges)
 
 
+def sender_blocks(blocked: BlockedCOO, src_core: int
+                  ) -> List[Tuple[int, Tuple[np.ndarray, np.ndarray, np.ndarray]]]:
+    """Column ``src_core`` of the block grid, ascending by destination core.
+
+    These are the blocks one sender owns (its Block-Message buffers); the
+    pre-reduced edge-plan builder compresses each and stacks the merged
+    rows into the sender's ELL tables.
+    """
+    return [(i, blocked.block_edges[(i, src_core)])
+            for i in range(blocked.n_cores)
+            if (i, src_core) in blocked.block_edges]
+
+
 def anti_diagonal_stages(n_cores: int, group_size: int = 4) -> List[List[List[Tuple[int, int]]]]:
     """Stage/group schedule of blocks (paper Fig. 6(a)).
 

@@ -1,12 +1,19 @@
-# The paper's two compute hot-spots, as Pallas TPU kernels:
-#   gemm.py  — combination engine (2-D MAC adder tree -> MXU tiles)
-#   spmm.py  — aggregation engine (COO MAC chains -> dual one-hot matmuls)
-#   flash.py — flash attention (the prefill memory wall found in §Perf)
-# ops.py holds the jit'd public wrappers (interpret=True off-TPU),
-# ref.py the pure-jnp oracles the tests sweep against.
-from .ops import gemm, spmm, spmm_block
+# The paper's compute hot-spots, as Pallas TPU kernels:
+#   gemm.py     — combination engine (2-D MAC adder tree -> MXU tiles)
+#   spmm.py     — aggregation engine: legacy COO one-hot matmuls (reference
+#                 arm) + the pre-reduced, src-tiled ELL family (hot path)
+#   edgeplan.py — host-side ELLPACK plan builder (Block-Message merge as a
+#                 layout; degree-bucketed, cached per graph)
+#   tune.py     — tile/bucket autotuner (JSON-persisted winner)
+#   flash.py    — flash attention (the prefill memory wall found in §Perf)
+# ops.py holds the jit'd public wrappers (interpret=True off-TPU) and the
+# ell_aggregate custom_vjp every aggregation path inherits its backward
+# from; ref.py the pure-jnp oracles the tests sweep against.
+from .ops import (ell_aggregate, ell_apply, gemm, spmm, spmm_block, spmm_ell,
+                  spmm_ell_t)
 from .flash import flash_mha
 from .ref import gemm_ref, mha_ref, spmm_ref, spmm_t_ref
 
-__all__ = ["gemm", "spmm", "spmm_block", "flash_mha", "gemm_ref", "mha_ref",
+__all__ = ["ell_aggregate", "ell_apply", "gemm", "spmm", "spmm_block",
+           "spmm_ell", "spmm_ell_t", "flash_mha", "gemm_ref", "mha_ref",
            "spmm_ref", "spmm_t_ref"]

@@ -1,26 +1,42 @@
-"""Block-COO SpMM Pallas kernel — the paper's aggregation engine, MXU-native.
+"""SpMM Pallas kernels — the paper's aggregation engine, MXU-native.
 
 The FPGA aggregates with scalar MAC chains over COO edges streamed from the
 Neighbor FIFO (paper §4.2).  A TPU has no efficient scalar scatter-add; the
-hardware-codesign move is to *densify per edge-chunk*: an edge chunk of E
-edges against a dst-tile of R rows and a src-tile of S rows becomes two tiny
-one-hot matmuls that run on the MXU,
+hardware-codesign move is to *densify per chunk* so aggregation uses exactly
+the same compute unit as combination — the paper's unified
+aggregation+combination engine argument (§5.4), transplanted to the MXU.
+
+Two kernel families live here:
+
+**COO (legacy reference arm)** — an edge chunk of E edges against a dst
+tile of R rows becomes two one-hot matmuls:
 
     G   = onehot(cols)  @ X_tile          # [E, S] @ [S, bd]  — the gather
     acc += (onehot(rows) * vals) @ G      # [R, E] @ [E, bd]  — the scatter-add
 
-so aggregation uses exactly the same compute unit as combination — the
-paper's *unified aggregation+combination engine* argument (§5.4: one engine,
-no Systolic/Scatter/Gather imbalance), transplanted to the MXU.
+Simple, bit-faithful to the segment-sum order — but the gather one-hot
+spans the WHOLE source shard per edge chunk (dense FLOPs ∝ e·n_src·d) and
+``x`` is staged whole-shard into VMEM, which cannot scale past toy shards.
 
-Tiling: grid = (d/bd, e/be) with the edge dimension innermost; the fp32
-accumulator tile [n_dst, bd] lives in VMEM scratch across edge chunks.  The
-dst tile (paper: 64 nodes/core) is small by construction — it is one core's
-Aggregate Buffer — so [n_dst, bd] fits VMEM comfortably.  Padding edges have
-val == 0 ⇒ their one-hot column is zeroed ⇒ no-ops, matching ref.spmm_ref.
+**Pre-reduced ELL (the hot path)** — :mod:`repro.kernels.edgeplan`
+materializes the Block-Message merge (§4.3.3's Reduced Register File) as
+padded per-row tables of (source, weight) pairs.  The kernel walks them
+with the SOURCE dimension tiled:
 
-Index arrays arrive as [1, e] int32 (TPU wants ≥2-D); one (1, be) chunk is
-staged into VMEM per grid step.
+    S[r, s] = Σ_k  vals[r, k] · [cols[r, k] == tile_start + s]   # VPU
+    acc    += S @ X_tile                  # [br, bs] @ [bs, bd]  — MXU
+
+One matmul per (row-tile, src-tile, feat-tile): total MXU FLOPs are
+n_rows·n_src·d — the dense-adjacency bound, independent of nnz AND of the
+ELL padding — and the scatter one-hot is gone entirely (the reduction over
+the degree axis happens in the merge matrix S).  Entries outside the
+current source tile simply never match the tile-local iota, so src tiling
+is free; padding entries point at the plan's dedicated zero row and carry
+weight 0.  The transpose walk (:func:`spmm_ell_t`) is the SAME kernel over
+the plan's column-major tables — the kernel-level transpose-free backward.
+
+Index arrays arrive ≥2-D (TPU layout); fp32 accumulator tiles live in VMEM
+scratch across the innermost grid axis.
 """
 from __future__ import annotations
 
@@ -32,9 +48,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _spmm_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
-                 n_e: int, n_dst: int, n_src: int):
-    @pl.when(pl.program_id(1) == 0)
+# ---------------------------------------------------------------------------
+# COO family (legacy reference arm) — one kernel body, two grid layouts.
+# ---------------------------------------------------------------------------
+def _spmm_coo_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
+                     n_e: int, n_rows: int, n_src: int, edge_axis: int):
+    """Shared COO body: dual one-hot matmuls over one edge chunk.
+
+    ``edge_axis`` is the grid axis that walks edge chunks (the innermost
+    one); ``n_rows`` is the scatter one-hot's row extent — the whole
+    destination range for the flat layout, one core's Aggregate Buffer
+    (``dpc`` rows, block-local offsets) for the Block-Message layout.
+    """
+    @pl.when(pl.program_id(edge_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -44,53 +70,20 @@ def _spmm_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
     be = rows.shape[0]
     x = x_ref[...]                              # [n_src, bd] VMEM tile
 
-    # gather via one-hot matmul: G[e, :] = x[cols[e], :]
+    # gather via one-hot matmul: G[e, :] = x[cols[e], :]; out-of-range cols
+    # (the wrappers' padding routes them past n_src) match no one-hot column
+    # and gather nothing at all.
     src_iota = jax.lax.broadcasted_iota(jnp.int32, (be, n_src), 1)
     onehot_src = (src_iota == cols[:, None]).astype(x.dtype)
     g = jnp.dot(onehot_src, x, preferred_element_type=jnp.float32)
 
     # scatter-add via one-hot matmul, edge weights folded into the one-hot
-    dst_iota = jax.lax.broadcasted_iota(jnp.int32, (n_dst, be), 0)
+    dst_iota = jax.lax.broadcasted_iota(jnp.int32, (n_rows, be), 0)
     onehot_dst = jnp.where(dst_iota == rows[None, :], vals[None, :], 0.0)
     acc_ref[...] += jnp.dot(onehot_dst.astype(jnp.float32), g,
                             preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(1) == n_e - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
-
-def _spmm_block_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
-                       n_e: int, dpc: int, n_src: int):
-    """Block-layout variant: one grid row per destination-core tile.
-
-    ``rows`` are BLOCK-LOCAL offsets (the Block-Message B values), so the
-    scatter one-hot is [dpc, be] — one core's Aggregate Buffer — instead of
-    a global [n_dst, be].  The gather side is unchanged: sources are already
-    local to the sender (NUMA), the destination side is what the Block
-    Message compresses.
-    """
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    rows = rows_ref[0, :]                       # [be] int32, block-local
-    cols = cols_ref[0, :]
-    vals = vals_ref[0, :]                       # [be] f32 (0 = padding)
-    be = rows.shape[0]
-    x = x_ref[...]                              # [n_src, bd] VMEM tile
-
-    src_iota = jax.lax.broadcasted_iota(jnp.int32, (be, n_src), 1)
-    onehot_src = (src_iota == cols[:, None]).astype(x.dtype)
-    g = jnp.dot(onehot_src, x, preferred_element_type=jnp.float32)
-
-    # per-block row offsets: the one-hot spans one tile, not the whole graph
-    dst_iota = jax.lax.broadcasted_iota(jnp.int32, (dpc, be), 0)
-    onehot_dst = jnp.where(dst_iota == rows[None, :], vals[None, :], 0.0)
-    acc_ref[...] += jnp.dot(onehot_dst.astype(jnp.float32), g,
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(pl.program_id(2) == n_e - 1)
+    @pl.when(pl.program_id(edge_axis) == n_e - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -115,8 +108,8 @@ def spmm_block(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
         raise ValueError(
             f"e_blk={e_blk}, d={d} not divisible by (be={be}, bd={bd})")
     grid = (n_blocks, d // bd, e_blk // be)
-    kernel = functools.partial(_spmm_block_kernel, n_e=grid[2], dpc=dpc,
-                               n_src=n_src)
+    kernel = functools.partial(_spmm_coo_kernel, n_e=grid[2], n_rows=dpc,
+                               n_src=n_src, edge_axis=2)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -149,8 +142,8 @@ def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     if e % be or d % bd:
         raise ValueError(f"e={e}, d={d} not divisible by (be={be}, bd={bd})")
     grid = (d // bd, e // be)
-    kernel = functools.partial(_spmm_kernel, n_e=grid[1], n_dst=n_dst,
-                               n_src=n_src)
+    kernel = functools.partial(_spmm_coo_kernel, n_e=grid[1], n_rows=n_dst,
+                               n_src=n_src, edge_axis=1)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -167,3 +160,96 @@ def spmm(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     )(rows.reshape(1, e).astype(jnp.int32),
       cols.reshape(1, e).astype(jnp.int32),
       vals.reshape(1, e).astype(jnp.float32), x)
+
+
+# ---------------------------------------------------------------------------
+# Pre-reduced ELL family (the hot path): src-tiled, scatter-free.
+# ---------------------------------------------------------------------------
+def _spmm_ell_kernel(cols_ref, vals_ref, x_ref, o_ref, acc_ref, *,
+                     n_s: int, bs: int, kc: int = 16):
+    """Gather-accumulate over one ELL row tile × one source tile.
+
+    Builds the merge matrix S[r, s] = Σ_k vals[r,k]·[cols[r,k] == s_global]
+    on the VPU (the Reduced Register File fold), then a single MXU matmul
+    S @ X.  Entries whose column lies outside this source tile never match
+    the tile-local iota — source tiling costs nothing.  Padding entries
+    carry weight 0 AND point at the plan's dedicated zero row, so they are
+    no-ops twice over.
+
+    The degree axis is folded in static chunks of ``kc`` so the one-hot
+    intermediate is [br, ≤kc, bs] — hub buckets (merged degree in the
+    thousands) stay a few hundred KB of VMEM instead of scaling the
+    temporary with K.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cols = cols_ref[...]                        # [br, K] int32
+    vals = vals_ref[...]                        # [br, K] f32 (0 = padding)
+    x = x_ref[...]                              # [bs, bd] VMEM source tile
+    local = cols - pl.program_id(2) * bs        # tile-local column ids
+    br, K = cols.shape
+    merge = jnp.zeros((br, bs), jnp.float32)    # [br, bs] — scatter-free
+    for k0 in range(0, K, kc):
+        lc = local[:, k0:k0 + kc]
+        lv = vals[:, k0:k0 + kc]
+        s_iota = jax.lax.broadcasted_iota(
+            jnp.int32, (br, lc.shape[1], bs), 2)
+        merge += jnp.where(s_iota == lc[:, :, None], lv[:, :, None],
+                           0.0).sum(axis=1)
+    acc_ref[...] += jnp.dot(merge, x.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_s - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bd", "bs", "interpret"))
+def spmm_ell(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, *,
+             br: int = 128, bd: int = 128, bs: int = 128,
+             interpret: bool = False) -> jnp.ndarray:
+    """Pre-reduced ELL SpMM: ``y[r] = Σ_k vals[r, k] · x[cols[r, k]]``.
+
+    ``cols``/``vals``: [nb, K] one degree bucket of an
+    :class:`repro.kernels.edgeplan.EllTables`; ``x``: [n_src_p, d] with the
+    plan's dedicated zero row included.  Grid = (nb/br, d/bd, n_src_p/bs)
+    with the SOURCE axis innermost — only a [bs, bd] tile of ``x`` is
+    resident per step, so the kernel scales past whole-shard VMEM staging.
+    All of nb, d, n_src_p must be tile multiples
+    (:func:`repro.kernels.ops.spmm_ell` absorbs padding).
+    """
+    nb, K = cols.shape
+    n_src_p, d = x.shape
+    if nb % br or d % bd or n_src_p % bs:
+        raise ValueError(f"nb={nb}, d={d}, n_src={n_src_p} not divisible by "
+                         f"(br={br}, bd={bd}, bs={bs})")
+    grid = (nb // br, d // bd, n_src_p // bs)
+    kernel = functools.partial(_spmm_ell_kernel, n_s=grid[2], bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, K), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((br, K), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bs, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((br, bd), jnp.float32)],
+        interpret=interpret,
+    )(cols.astype(jnp.int32), vals.astype(jnp.float32), x)
+
+
+def spmm_ell_t(t_cols: jnp.ndarray, t_vals: jnp.ndarray, e: jnp.ndarray, *,
+               br: int = 128, bd: int = 128, bs: int = 128,
+               interpret: bool = False) -> jnp.ndarray:
+    """Transpose-free backward walk: ``dx[c] = Σ_k t_vals[c, k]·e[t_cols[c, k]]``.
+
+    The SAME gather-accumulate kernel as :func:`spmm_ell`, fed the plan's
+    column-major (Graph Converter order) tables — ``Aᵀ e`` as a kernel, with
+    no ``Aᵀ`` table, no transposed error copy, and no segment-sum scatter.
+    """
+    return spmm_ell(t_cols, t_vals, e, br=br, bd=bd, bs=bs,
+                    interpret=interpret)
