@@ -11,12 +11,14 @@ The FPGA cannot be timed here, so the reproduction has two layers:
   2. **Measured at reduced scale**: wall-clock s/epoch of the actual jitted
      training step on the synthetic datasets, ours vs naive, same seeds.
 
-``--overlap`` adds a third arm (paper §4.3, Fig. 9): the distributed train
-step on a forced multi-device CPU backend, serial hypercube aggregation vs
-the double-buffered pipelined schedule, same graph and seeds — reporting
-the measured step-time speedup of the overlap.  Because XLA_FLAGS must be
-set before jax imports, the overlap arm re-executes itself in a child
-process; results land in ``BENCH_overlap.json``.
+``--overlap`` runs the measured engine-arm comparison (paper §4.3, Fig. 9):
+the distributed train step on a forced multi-device CPU backend, the serial
+``coo+serial`` oracle vs every arm in ``--arms`` (engine spec strings,
+default ``block+pipelined,ell+pipelined`` — the old ``--ell/--no-ell`` flag
+pair collapsed into specs), same graph and seeds — reporting the measured
+step-time speedup per arm.  Because XLA_FLAGS must be set before jax
+imports, the arm measurement re-executes itself in a child process; results
+land in ``BENCH_overlap.json``.
 """
 from __future__ import annotations
 
@@ -121,8 +123,20 @@ def measured_epoch(name: str, scale: float = 0.01, batch: int = 64,
 
 
 # ---------------------------------------------------------------------------
-# --overlap arm: serial vs pipelined hypercube aggregation, measured.
+# --overlap arms: the serial oracle vs each engine spec, measured.
 # ---------------------------------------------------------------------------
+#: legacy metric names per spec — keeps BENCH_overlap.json keys (and the
+#: compare.py tracked paths) stable across the Engine migration; an
+#: unlisted spec records under its spec string
+ARM_NAMES = {"coo+serial": "serial", "block+pipelined": "overlap",
+             "ell+pipelined": "ell"}
+DEFAULT_ARMS = ("block+pipelined", "ell+pipelined")
+
+
+def _arm_name(spec: str) -> str:
+    return ARM_NAMES.get(spec, spec.replace("+", "_"))
+
+
 def _synthetic_layers(batch: int, mid: int, frontier: int, deg: int,
                       seed: int = 0):
     """Two sampled layers of a synthetic power-graph (COO, deepest last).
@@ -147,17 +161,11 @@ def _synthetic_layers(batch: int, mid: int, frontier: int, deg: int,
     return [layer(batch, mid), layer(mid, frontier)]
 
 
-def _synthetic_sharded_batch(n_cores: int, batch: int, mid: int,
-                             frontier: int, feat: int, deg: int,
-                             layout: str, layers, seed: int = 0,
-                             mesh=None) -> Dict:
-    """Shared synthetic layers → device-ready sharded batch.
-
-    ``mesh`` commits every leaf to its core-axis sharding at build time
-    (placement once per minibatch, not per step).
-    """
-    from repro.distributed.gcn_train import shard_minibatch
-
+def _synthetic_sharded_batch(bundle, batch: int, frontier: int, feat: int,
+                             layers, seed: int = 0) -> Dict:
+    """Shared synthetic layers → device-ready sharded batch through one
+    engine bundle (the bundle's mesh commits every leaf to its core-axis
+    sharding at build time — placement once per minibatch, not per step)."""
     rng = np.random.default_rng(seed + 1)
 
     class _MB:                       # duck-typed MiniBatch: layers only
@@ -166,18 +174,17 @@ def _synthetic_sharded_batch(n_cores: int, batch: int, mid: int,
     _MB.layers = layers
     x = rng.standard_normal((frontier, feat)).astype(np.float32)
     labels = rng.integers(0, 16, batch).astype(np.int32)
-    return shard_minibatch(_MB(), x, labels, n_cores, layout=layout,
-                           mesh=mesh)
+    return bundle.shard_batch(_MB(), x, labels)
 
 
 def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
                      frontier: int = 8192, feat: int = 256,
                      hidden: int = 256, deg: int = 16, n_steps: int = 3,
                      n_trials: int = 12, n_chunks=None, seed: int = 0,
-                     ell: bool = True) -> Dict:
-    """Step time of the distributed GCN train step: serial vs pipelined
-    (bit-exact Block-Message tiles) vs pre-reduced ELL aggregation.  Must
-    run under a multi-device backend.
+                     arms=DEFAULT_ARMS) -> Dict:
+    """Step time of the distributed GCN train step: the ``coo+serial``
+    oracle vs every engine spec in ``arms``.  Must run under a multi-device
+    backend.
 
     All arms run back-to-back inside every trial and each reported speedup
     is the MEDIAN of the per-trial serial/arm ratios: on shared/
@@ -193,76 +200,79 @@ def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
     reused across all measured steps.
     """
     from repro.distributed.aggregate import shard_edges_ell
-    from repro.distributed.gcn_train import init_params, make_train_step
+    from repro.distributed.gcn_train import init_params
+    from repro.engine import Engine, EngineConfig
 
-    if n_cores & (n_cores - 1):
-        raise ValueError(
-            f"the hypercube schedule needs a power-of-two core count, "
-            f"got --cores {n_cores}")
     if len(jax.devices()) < n_cores:
         raise RuntimeError(
             f"need {n_cores} devices, have {len(jax.devices())} — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count")
     mesh = jax.make_mesh((n_cores,), ("model",))
+    # canonicalize first (' ell' / bare 'ell' → 'ell+pipelined') so the
+    # legacy-key mapping, dedupe, and the oracle filter all see one
+    # spelling; the oracle always runs — listing it as an arm would only
+    # race it against itself (and collide on the 'serial' metric names)
+    arms = tuple(EngineConfig.from_spec(s).spec for s in arms)
+    arms = tuple(dict.fromkeys(s for s in arms if s != "coo+serial"))
     out: Dict = {"n_cores": n_cores, "batch": batch, "mid": mid,
                  "frontier": frontier, "feat": feat, "hidden": hidden,
                  "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
-                 "n_chunks": n_chunks}
-    variants = [("serial", "flat", {}), ("overlap", "blocked",
-                                         {"overlap": True})]
-    if ell:
-        variants.append(("ell", "ell", {"overlap": True, "ell": True}))
+                 "n_chunks": n_chunks, "arms": list(arms)}
+    variants = [("serial", "coo+serial")] + [(_arm_name(s), s) for s in arms]
+    ell = "ell+pipelined" in arms
     layers = _synthetic_layers(batch, mid, frontier, deg, seed)
     from repro.kernels import edgeplan
     misses_at_start = edgeplan.cache_stats()["misses"]
-    arms = {}
-    for arm, layout, kw in variants:
-        b = _synthetic_sharded_batch(n_cores, batch, mid, frontier, feat,
-                                     deg, layout=layout, layers=layers,
-                                     seed=seed, mesh=mesh)
+    runs = {}
+    for arm, spec in variants:
+        # the power-of-two core-count check lives in Engine.build now
+        bundle = Engine(EngineConfig.from_spec(
+            spec, lr=0.05, n_chunks=n_chunks)).build(mesh)
+        b = _synthetic_sharded_batch(bundle, batch, frontier, feat,
+                                     layers=layers, seed=seed)
         params = init_params(jax.random.PRNGKey(seed),
                              [(feat, hidden), (hidden, 16)])
-        step = make_train_step(mesh, b["dims"], lr=0.05, n_chunks=n_chunks,
-                               **kw)
+        step = bundle.train_step_fn(b["dims"])
         params, loss = step(params, b)        # compile
         params, loss = step(params, b)        # warmup
         jax.block_until_ready(loss)
-        arms[arm] = {"step": step, "batch": b, "params": params,
+        runs[arm] = {"step": step, "batch": b, "params": params,
                      "loss": float(loss), "times": []}
     # plan builds for THESE layers: misses added while the arms were set up
-    # (only shard_edges_ell goes through the edgeplan cache)
+    # (shard_edges_ell and the engine layout caches share the edgeplan
+    # cache; the layer-shard builds dominate the count)
     builds_setup = edgeplan.cache_stats()["misses"] - misses_at_start
     for _ in range(n_trials):
-        for arm in arms.values():
+        for arm in runs.values():
             t0 = time.perf_counter()
             params, loss = arm["params"], None
             for _ in range(n_steps):
                 params, loss = arm["step"](params, arm["batch"])
             jax.block_until_ready(loss)
             arm["times"].append((time.perf_counter() - t0) / n_steps)
-    out["s_per_step_serial"] = min(arms["serial"]["times"])
-    out["loss_serial"] = arms["serial"]["loss"]
-    for arm in arms:
+    out["s_per_step_serial"] = min(runs["serial"]["times"])
+    out["loss_serial"] = runs["serial"]["loss"]
+    for arm in runs:
         if arm == "serial":
             continue
         suffix = "" if arm == "overlap" else f"_{arm}"
-        ratios = sorted(s / o for s, o in zip(arms["serial"]["times"],
-                                              arms[arm]["times"]))
-        out[f"s_per_step_{arm}"] = min(arms[arm]["times"])
+        ratios = sorted(s / o for s, o in zip(runs["serial"]["times"],
+                                              runs[arm]["times"]))
+        out[f"s_per_step_{arm}"] = min(runs[arm]["times"])
         out[f"trial_ratios{suffix}"] = [round(r, 3) for r in ratios]
-        out[f"loss_{arm}"] = arms[arm]["loss"]
+        out[f"loss_{arm}"] = runs[arm]["loss"]
         out[f"loss_match{suffix}"] = abs(out["loss_serial"]
-                                         - arms[arm]["loss"]) < 1e-5
+                                         - runs[arm]["loss"]) < 1e-5
         out[f"speedup{suffix}"] = ratios[len(ratios) // 2]  # paired median
     out.update(_measured_overlap_aggregate_op(
         n_cores, mid, frontier, hidden, deg, n_trials * n_steps, seed,
-        ell=ell))
+        arms=arms, n_chunks=n_chunks))
     if ell:
         # EdgePlan cache proof: the plans the measured steps consumed are
         # STILL the cached objects — re-requesting every layer's shards
         # after all timed work must add zero builder misses (a per-step or
         # per-arm rebuild would have shown up as misses during the runs;
-        # the shard build inside shard_minibatch was the one and only).
+        # the shard build inside shard_batch was the one and only).
         misses_before = edgeplan.cache_stats()["misses"]
         for coo in layers:
             shard_edges_ell(coo, n_cores)
@@ -274,56 +284,34 @@ def measured_overlap(n_cores: int = 8, batch: int = 512, mid: int = 2048,
 
 def _measured_overlap_aggregate_op(n_cores: int, n_dst: int, n_src: int,
                                    d: int, deg: int, n_pairs: int,
-                                   seed: int, ell: bool = True) -> Dict:
-    """The hot path in isolation: serial vs pipelined vs pre-reduced ELL
+                                   seed: int, arms=DEFAULT_ARMS,
+                                   n_chunks=None) -> Dict:
+    """The hot path in isolation: the serial oracle vs every engine arm's
     aggregate, forward and forward+backward, paired per call (the arms of a
     pair run back to back so host-load noise is common-mode).
 
     Inside the full train step the aggregation savings can hide under
     unrelated gradient work on an oversubscribed CPU host, so the op-level
-    ratios are reported alongside the step-level ones.  All edge arrays are
-    committed to their core-axis sharding up front — what the training
-    pipeline does once per minibatch — so the ratios measure the schedule,
-    not jit's per-call re-layout of uncommitted operands.
+    ratios are reported alongside the step-level ones.  ``bundle.aggregator``
+    commits every edge leaf to its core-axis sharding up front — the SAME
+    placement rule the training pipeline runs once per minibatch — so the
+    ratios measure the schedule, not jit's per-call re-layout of
+    uncommitted operands.
     """
-    from repro.compat import shard_map
-    from jax.sharding import PartitionSpec as P
-    from repro.distributed.aggregate import (
-        hypercube_aggregate, hypercube_aggregate_ell,
-        hypercube_aggregate_pipelined, shard_edges, shard_edges_blocked,
-        shard_edges_ell)
     from repro.distributed.sharding import leading_axis_put
+    from repro.engine import Engine, EngineConfig
     from repro.graph.coo import from_edges
 
     rng = np.random.default_rng(seed)
-    ndim = int(np.log2(n_cores))
     e = n_dst * deg
     coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
                      np.abs(rng.standard_normal(e)).astype(np.float32) + 0.1,
                      n_dst, n_src)
     mesh = jax.make_mesh((n_cores,), ("model",))
-
-    def commit(a):
-        # the SAME placement rule the train path uses (one transfer,
-        # committed once) — so the benchmark can never measure a layout
-        # the training pipeline doesn't run
-        return leading_axis_put(mesh, a)
-
-    x = commit(rng.standard_normal((n_src, d)).astype(np.float32))
-    es = shard_edges(coo, n_cores)
-    eb = shard_edges_blocked(coo, n_cores)
-    a_s = tuple(commit(a) for a in (es.rows_global, es.cols_local, es.vals))
-    a_b = tuple(commit(a) for a in (eb.rows_local, eb.cols_local, eb.vals))
-    ser = jax.jit(shard_map(
-        lambda r, c, v, xl: hypercube_aggregate(
-            "model", ndim, n_dst, r[0], c[0], v[0], xl),
-        mesh=mesh, in_specs=(P("model"),) * 4, out_specs=P("model")))
-    pip = jax.jit(shard_map(
-        lambda r, c, v, xl: hypercube_aggregate_pipelined(
-            "model", ndim, n_dst, r[0], c[0], v[0], xl),
-        mesh=mesh, in_specs=(P("model"),) * 4, out_specs=P("model")))
-    gs = jax.jit(jax.grad(lambda xx: jnp.sum(ser(*a_s, xx) ** 2)))
-    gp = jax.jit(jax.grad(lambda xx: jnp.sum(pip(*a_b, xx) ** 2)))
+    x = leading_axis_put(mesh,
+                         rng.standard_normal((n_src, d)).astype(np.float32))
+    ser = Engine("coo+serial").build(mesh, graph=coo).aggregator()
+    gs = jax.jit(jax.grad(lambda xx: jnp.sum(ser(xx) ** 2)))
 
     def paired(f1, args1, f2, args2):
         jax.block_until_ready(f1(*args1))
@@ -338,34 +326,34 @@ def _measured_overlap_aggregate_op(n_cores: int, n_dst: int, n_src: int,
         rs.sort()
         return rs[len(rs) // 2]
 
-    out = {
-        "agg_fwd_speedup": paired(ser, (*a_s, x), pip, (*a_b, x)),
-        "agg_fwdbwd_speedup": paired(gs, (x,), gp, (x,)),
-    }
-    if ell:
-        from repro.distributed.sharding import leading_axis_spec
-        ee = shard_edges_ell(coo, n_cores)
-        tabs = jax.tree_util.tree_map(commit, ee.tables)
-        especs = jax.tree_util.tree_map(leading_axis_spec, tabs)
-        agg_ell = jax.jit(shard_map(
-            lambda t, xl: hypercube_aggregate_ell(
-                "model", ndim, n_dst,
-                jax.tree_util.tree_map(lambda a: a[0], t), xl),
-            mesh=mesh, in_specs=(especs, P("model")),
-            out_specs=P("model")))
-        ge = jax.jit(jax.grad(lambda xx: jnp.sum(agg_ell(tabs, xx) ** 2)))
-        out["agg_fwd_speedup_ell"] = paired(ser, (*a_s, x), agg_ell,
-                                            (tabs, x))
-        out["agg_fwdbwd_speedup_ell"] = paired(gs, (x,), ge, (x,))
+    out: Dict = {}
+    for spec in arms:
+        name = _arm_name(spec)
+        suffix = "" if name == "overlap" else f"_{name}"
+        fn = Engine(EngineConfig.from_spec(spec, n_chunks=n_chunks)) \
+            .build(mesh, graph=coo).aggregator()
+        gf = jax.jit(jax.grad(lambda xx, fn=fn: jnp.sum(fn(xx) ** 2)))
+        out[f"agg_fwd_speedup{suffix}"] = paired(ser, (x,), fn, (x,))
+        out[f"agg_fwdbwd_speedup{suffix}"] = paired(gs, (x,), gf, (x,))
     return out
 
 
 def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
-                    ell: bool = True,
+                    arms=DEFAULT_ARMS,
                     out_path: str = "BENCH_overlap.json") -> Dict:
-    """Re-exec the overlap measurement under a forced multi-device backend
-    (XLA_FLAGS must precede the jax import) and write ``out_path``."""
-    kwargs = {"n_cores": n_cores, "ell": ell}
+    """Re-exec the engine-arm measurement under a forced multi-device
+    backend (XLA_FLAGS must precede the jax import) and write ``out_path``.
+
+    ``arms`` are engine spec strings, validated against the registry before
+    the child process launches.
+    """
+    from repro.engine import EngineConfig
+
+    # canonicalize + fail fast (listing registered options), dedupe, and
+    # drop the oracle — it always runs as the baseline of every pair
+    arms = tuple(EngineConfig.from_spec(s).spec for s in arms)
+    arms = tuple(dict.fromkeys(s for s in arms if s != "coo+serial"))
+    kwargs = {"n_cores": n_cores, "arms": arms}
     if smoke:
         kwargs.update(batch=128, mid=256, frontier=512, feat=64, hidden=64,
                       deg=8, n_steps=3)
@@ -388,22 +376,23 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
     rec = json.loads(proc.stdout.strip().splitlines()[-1])
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
-    print(f"## measured overlap arm ({n_cores} simulated cores)")
+    print(f"## measured engine arms ({n_cores} simulated cores): "
+          f"coo+serial vs {', '.join(arms)}")
     print("arm,s_per_step")
     print(f"serial,{rec['s_per_step_serial']:.4f}")
-    print(f"overlap,{rec['s_per_step_overlap']:.4f}")
-    if "s_per_step_ell" in rec:
-        print(f"ell,{rec['s_per_step_ell']:.4f}")
-    print(f"# train-step speedup {rec['speedup']:.3f}x (paired median)  "
-          f"loss_match={rec['loss_match']}")
-    print(f"# aggregation-op speedup: fwd {rec['agg_fwd_speedup']:.3f}x  "
-          f"fwd+bwd {rec['agg_fwdbwd_speedup']:.3f}x (paired median)")
-    if "speedup_ell" in rec:
-        print(f"# ELL arm: train-step {rec['speedup_ell']:.3f}x  "
-              f"agg fwd {rec['agg_fwd_speedup_ell']:.3f}x  "
-              f"fwd+bwd {rec['agg_fwdbwd_speedup_ell']:.3f}x  "
-              f"loss_match={rec['loss_match_ell']}  "
-              f"plan_cached={rec.get('edge_plan_cached')}")
+    for spec in arms:
+        name = _arm_name(spec)
+        print(f"{name},{rec[f's_per_step_{name}']:.4f}")
+    for spec in arms:
+        name = _arm_name(spec)
+        suffix = "" if name == "overlap" else f"_{name}"
+        print(f"# {spec}: train-step {rec[f'speedup{suffix}']:.3f}x  "
+              f"agg fwd {rec[f'agg_fwd_speedup{suffix}']:.3f}x  "
+              f"fwd+bwd {rec[f'agg_fwdbwd_speedup{suffix}']:.3f}x  "
+              f"loss_match={rec[f'loss_match{suffix}']}"
+              + (f"  plan_cached={rec.get('edge_plan_cached')}"
+                 if name == "ell" else "")
+              + "  (paired median)")
     print(f"# (wrote {out_path})")
     return rec
 
@@ -411,20 +400,21 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--overlap", action="store_true",
-                    help="measure serial vs pipelined aggregation step time")
+                    help="measure the engine arms' step time vs the "
+                         "coo+serial oracle")
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes (CI): implies a quick --overlap run")
     ap.add_argument("--cores", type=int, default=8,
-                    help="simulated device count for the overlap arm")
-    ap.add_argument("--ell", action="store_true", default=None,
-                    help="include the pre-reduced ELL arm (default: on)")
-    ap.add_argument("--no-ell", dest="ell", action="store_false",
-                    help="skip the ELL arm")
+                    help="simulated device count for the arm measurement")
+    ap.add_argument("--arms", default=",".join(DEFAULT_ARMS),
+                    help="comma-separated engine specs to measure against "
+                         "the coo+serial oracle (replaces the old "
+                         "--ell/--no-ell flag pair)")
     args = ap.parse_args()
 
     if args.overlap or args.smoke:
-        run_overlap_arm(args.cores, smoke=args.smoke,
-                        ell=True if args.ell is None else args.ell)
+        arms = tuple(s for s in args.arms.split(",") if s)
+        run_overlap_arm(args.cores, smoke=args.smoke, arms=arms)
         return
     _table2_main()
 

@@ -42,8 +42,8 @@ def smoke() -> int:
                        "path": tune.cache_path()}
     print(f"config: {tune_rec['config']}  (wrote {tune.cache_path()})")
 
-    print(f"\n{'=' * 72}\npipelined aggregation — overlap + ELL arms (toy)\n"
-          f"{'=' * 72}")
+    print(f"\n{'=' * 72}\nengine arms — coo+serial oracle vs "
+          f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
     from benchmarks.epoch_time import run_overlap_arm
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 

@@ -1,12 +1,17 @@
 """The paper's architecture end-to-end, distributed: 16 virtual devices play
 the 16 cores — local combination GEMMs, hypercube message-passing
 aggregation with sender-side pre-reduction, transpose-free backward, and
-Weight-Bank gradient sync.
+Weight-Bank gradient sync, all through the declarative Engine API.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=16 \
-        PYTHONPATH=src python examples/distributed_gcn.py
+        PYTHONPATH=src python examples/distributed_gcn.py [SPEC]
+
+SPEC is an engine spec string (default ``ell+pipelined``) — any registered
+format+schedule combination works unchanged: ``coo+serial``,
+``block+pipelined``, ``ell+pipelined``.
 """
 import os
+import sys
 
 if "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
@@ -17,22 +22,23 @@ import jax                      # noqa: E402
 from repro.compat import set_mesh  # noqa: E402
 import numpy as np              # noqa: E402
 
-from repro.distributed.gcn_train import (init_params, make_train_step,  # noqa: E402
-                                         shard_minibatch)
+from repro.engine import Engine, EngineConfig  # noqa: E402
+from repro.distributed.gcn_train import init_params  # noqa: E402
 from repro.graph import NeighborSampler, make_dataset  # noqa: E402
 
 
-def main() -> None:
+def main(spec: str = "ell+pipelined") -> None:
     ds = make_dataset("reddit", scale=0.005, feat_dim=64)
     sampler = NeighborSampler(ds.graph, fanouts=(5, 10), pad_multiple=16,
                               seed=0)
     mesh = jax.make_mesh((16,), ("model",))
+    engine = Engine(EngineConfig.from_spec(spec, lr=0.1))
+    bundle = engine.build(mesh)
     print(f"mesh: {dict(mesh.shape)} — each device is one of the paper's "
-          f"16 hypercube cores")
+          f"16 hypercube cores; engine spec: {engine.spec}")
     rng = np.random.default_rng(0)
     params = init_params(jax.random.PRNGKey(0),
                          [(64, 64), (64, ds.stats.n_classes)])
-    step = None
     with set_mesh(mesh):
         for i in range(20):
             seeds = rng.permutation(ds.graph.n_nodes)[:64]
@@ -42,15 +48,14 @@ def main() -> None:
                                            ds.graph.n_nodes - 1)]
             pad = mb.layers[0].n_dst - len(seeds)
             labels = ds.labels[np.pad(seeds, (0, pad))]
-            batch = shard_minibatch(mb, feats, labels, 16)
-            if step is None:
-                step = make_train_step(mesh, batch["dims"], lr=0.1)
-            params, loss = step(params, batch)
+            batch = bundle.shard_batch(mb, feats, labels)
+            params, loss = bundle.train_step(params, batch)
             if i % 5 == 0:
                 print(f"step {i:3d}  loss {float(loss):.4f}")
     print("done — combination stayed core-local, aggregation rode the "
-          "hypercube, weights synced via the Weight Bank psum")
+          f"hypercube under the {engine.spec} engine, weights synced via "
+          "the Weight Bank psum")
 
 
 if __name__ == "__main__":
-    main()
+    main(*sys.argv[1:2])

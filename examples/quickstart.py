@@ -3,6 +3,10 @@ graph with the transpose-free dataflow, the sequence estimator choosing the
 execution order, and checkpointing enabled.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The aggregation engine is declared, not flag-selected: ``engine`` names a
+registered format+schedule spec (``repro.engine.supported_specs()`` lists
+them all).
 """
 import tempfile
 
@@ -15,6 +19,7 @@ def main() -> None:
             "flickr",                # synthetic stand-in (paper §5.1 stats)
             model="gcn",             # or "sage"
             dataflow="ours",         # the paper's Table-1 redesign
+            engine="coo+serial",     # Engine spec: format+schedule
             scale=0.01,              # shrink for CPU
             batch_size=64,
             steps=100,

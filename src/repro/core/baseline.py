@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.coo import COO
-from .gcn import _int_zero_ct, _spmm
+from repro.cotangents import zero_ct
+from .gcn import _spmm
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
@@ -67,8 +68,7 @@ def _bwd(n_dst, n_src, order, activate, res, ct):
         dw = feat_t @ dz                                # (AX)ᵀ · dz
         dax = dz @ wt
         dx = _spmm(t_rows, t_cols, t_vals, dax, n_src)
-    return (_int_zero_ct(t_rows), _int_zero_ct(t_cols), jnp.zeros_like(t_vals),
-            dx, dw)
+    return (*zero_ct((t_rows, t_cols, t_vals)), dx, dw)
 
 
 gcn_layer_naive.defvjp(_fwd, _bwd)

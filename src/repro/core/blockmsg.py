@@ -177,7 +177,7 @@ def dst_tiles(blocked: BlockedCOO, eb_max: Optional[int] = None
     Tile *i* holds ALL edges whose destinations live in row-stripe *i* of
     the block grid — block-local row offsets, GLOBAL column ids (the dense
     feature matrix is one address space on a single device).  This is the
-    layout :func:`repro.core.gcn.gcn_layer_blocked` feeds the kernel; the
+    layout the ``block`` engine format feeds the kernel; the
     distributed path uses the sender-side :func:`block_tiles` instead.
     """
     P = blocked.n_cores

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cotangents import zero_ct
+from repro.deprecation import warn_engine_shim as _warn_shim
 from repro.graph.coo import COO
 
 Order = str  # 'coag' | 'agco'
@@ -46,11 +48,6 @@ def _spmm_t(rows, cols, vals, e, n_src):
     (column-major walk = the Graph Converter's backward order)."""
     gathered = e[rows] * vals[:, None]
     return jax.ops.segment_sum(gathered, cols, num_segments=n_src)
-
-
-def _int_zero_ct(a):
-    """Cotangent for integer (index) inputs."""
-    return np.zeros(a.shape, dtype=jax.dtypes.float0)
 
 
 # ---------------------------------------------------------------------------
@@ -99,8 +96,8 @@ def _gcn_layer_bwd(n_dst, n_src, order, activate, res, ct):
         # d(AX) = dz Wᵀ — contract over h
         dax = jnp.einsum("nh,dh->nd", dz, w)
         dx = _spmm_t(rows, cols, vals, dax, n_src)
-    dvals = jnp.zeros_like(vals)  # fixed normalized adjacency — not trained
-    return (_int_zero_ct(rows), _int_zero_ct(cols), dvals, dx, dw)
+    # fixed normalized adjacency — indices float0, weights plain zeros
+    return (*zero_ct((rows, cols, vals)), dx, dw)
 
 
 _gcn_layer.defvjp(_gcn_layer_fwd, _gcn_layer_bwd)
@@ -180,23 +177,24 @@ def _gcn_layer_block_bwd(dpc, n_src, order, activate, res, ct):
         dw = jnp.einsum("nd,nh->dh", saved_feat, dz)
         dax = jnp.einsum("nh,dh->nd", dz, w)
         dx = _spmm_t_blocked(rows_b, cols_b, vals_b, dax, n_src)
-    dvals = jnp.zeros_like(vals_b)
-    return (_int_zero_ct(rows_b), _int_zero_ct(cols_b), dvals, dx, dw)
+    return (*zero_ct((rows_b, cols_b, vals_b)), dx, dw)
 
 
 _gcn_layer_block.defvjp(_gcn_layer_block_fwd, _gcn_layer_block_bwd)
 
 
-def gcn_layer_blocked(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
-                      order: Order = "coag", activate: bool = True
-                      ) -> jnp.ndarray:
+def _layer_blocked_impl(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
+                        order: Order = "coag", activate: bool = True
+                        ) -> jnp.ndarray:
     """GCN layer whose aggregation consumes Block-Message tiles directly.
 
     ``tiles`` is :func:`repro.core.blockmsg.dst_tiles` output (receiver-side
     layout: block-local rows, global cols).  Forward runs the block-layout
     Pallas SpMM (:func:`repro.kernels.ops.spmm_block`); backward walks the
     same tiles column-major — transpose-free, like :func:`gcn_layer`, but
-    with per-block row offsets instead of global one-hot gathers.
+    with per-block row offsets instead of global one-hot gathers.  The
+    registered ``"block"`` format (:mod:`repro.engine.formats`) is the
+    supported way in.
     """
     if x.shape[0] < int(np.max(tiles.cols)) + 1:
         raise ValueError(f"x rows {x.shape[0]} too few for tile col ids")
@@ -210,9 +208,9 @@ def gcn_layer_blocked(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
 # ---------------------------------------------------------------------------
 # Pre-reduced ELL variant: aggregation through the EdgePlan engine.
 # ---------------------------------------------------------------------------
-def gcn_layer_ell(plan, x: jnp.ndarray, w: jnp.ndarray, *,
-                  order: Order = "coag", activate: bool = True
-                  ) -> jnp.ndarray:
+def _layer_ell_impl(plan, x: jnp.ndarray, w: jnp.ndarray, *,
+                    order: Order = "coag", activate: bool = True
+                    ) -> jnp.ndarray:
     """GCN layer whose aggregation runs the pre-reduced ELL engine.
 
     ``plan`` is :func:`repro.kernels.edgeplan.build_plan` output (built once
@@ -220,7 +218,8 @@ def gcn_layer_ell(plan, x: jnp.ndarray, w: jnp.ndarray, *,
     :func:`repro.kernels.ops.ell_aggregate`: the backward walks the plan's
     column-major tables with the same scatter-free kernel, so this layer
     inherits the transpose-free backward from the ops wrapper instead of
-    re-registering its own vjp.
+    re-registering its own vjp.  The registered ``"ell"`` format
+    (:mod:`repro.engine.formats`) is the supported way in.
     """
     from repro.kernels.ops import ell_aggregate
 
@@ -234,6 +233,39 @@ def gcn_layer_ell(plan, x: jnp.ndarray, w: jnp.ndarray, *,
     else:
         raise ValueError(order)
     return jnp.maximum(z, 0.0) if activate else z
+
+
+# ---------------------------------------------------------------------------
+# Deprecated flag-era entry points (kept as warning shims for one cycle).
+# ---------------------------------------------------------------------------
+def gcn_layer_blocked(tiles, x: jnp.ndarray, w: jnp.ndarray, *,
+                      order: Order = "coag", activate: bool = True
+                      ) -> jnp.ndarray:
+    """Deprecated shim — the block-tile layer now lives behind the Engine:
+    ``Engine("block+pipelined").layer(coo, x, w)`` (layout built and cached
+    for you), or ``get_format("block").layer(tiles, ...)`` with prebuilt
+    tiles."""
+    from repro.engine import get_format
+
+    _warn_shim("gcn_layer_blocked",
+               'repro.engine.Engine("block+pipelined").layer(coo, x, w)')
+    return get_format("block").layer(tiles, x, w, order=order,
+                                     activate=activate)
+
+
+def gcn_layer_ell(plan, x: jnp.ndarray, w: jnp.ndarray, *,
+                  order: Order = "coag", activate: bool = True
+                  ) -> jnp.ndarray:
+    """Deprecated shim — the pre-reduced ELL layer now lives behind the
+    Engine: ``Engine("ell+pipelined").layer(coo, x, w)`` (plan built and
+    cached for you), or ``get_format("ell").layer(plan, ...)`` with a
+    prebuilt plan."""
+    from repro.engine import get_format
+
+    _warn_shim("gcn_layer_ell",
+               'repro.engine.Engine("ell+pipelined").layer(coo, x, w)')
+    return get_format("ell").layer(plan, x, w, order=order,
+                                   activate=activate)
 
 
 def residual_bytes(order: Order, n_dst: int, n_src: int, d: int, h: int,

@@ -1,0 +1,28 @@
+"""Zero cotangents for non-differentiable residuals, shared by every
+custom_vjp in the repo.
+
+Every aggregation backward returns "no gradient" for its edge-table
+operands: integer index arrays legally take a ``float0`` cotangent (JAX's
+unit type for non-differentiable integer inputs), float operands (the fixed
+normalized adjacency weights) take ordinary zeros.  This module is the one
+implementation — ``repro.core.gcn``, ``repro.kernels.ops`` and
+``repro.distributed.aggregate`` all used to carry private copies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zero_ct(tree):
+    """Zero cotangent for a pytree (or single array) of residual operands.
+
+    Integer leaves (edge indices) map to ``float0`` zeros — the only valid
+    cotangent dtype for integer primals — and float leaves (adjacency
+    weights, which are fixed, not trained) map to ``zeros_like``.
+    """
+    return jax.tree_util.tree_map(
+        lambda a: (np.zeros(np.shape(a), jax.dtypes.float0)
+                   if jnp.issubdtype(jnp.asarray(a).dtype, jnp.integer)
+                   else jnp.zeros_like(a)), tree)

@@ -1,0 +1,16 @@
+"""The one deprecation-warning helper for the Engine-migration shims.
+
+Kept in a single module so the warning text, category, and stacklevel stay
+in lockstep with the pytest ``filterwarnings`` gate (which matches on
+"use the Engine API") — the shims in ``repro.core.gcn`` and
+``repro.distributed.gcn_train`` both emit through here.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_engine_shim(old: str, new: str) -> None:
+    """Emit the standard shim warning, attributed to the shim's caller."""
+    warnings.warn(f"{old} is deprecated; use the Engine API instead: {new}",
+                  DeprecationWarning, stacklevel=3)

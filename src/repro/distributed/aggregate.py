@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.blockmsg import block_tiles
 from repro.core.schedule import feature_waves
+from repro.cotangents import zero_ct
 from repro.distributed.overlap import double_buffered_exchange
 from repro.graph.coo import COO
 from repro.graph.partition import block_partition
@@ -251,10 +252,8 @@ def _hyper_bwd(axis_name, ndim, n_dst, res, ct):
     gathered = e_full[rows_g] * vals[:, None]
     dx_local = jax.ops.segment_sum(gathered, cols_l,
                                    num_segments=n_src_local)
-    dvals = jnp.zeros_like(vals)   # adjacency weights are not trained
-    zr = np.zeros(rows_g.shape, dtype=jax.dtypes.float0)
-    zc = np.zeros(cols_l.shape, dtype=jax.dtypes.float0)
-    return (zr, zc, dvals, dx_local)
+    # adjacency is fixed: float0 for the index arrays, zeros for the weights
+    return (*zero_ct((rows_g, cols_l, vals)), dx_local)
 
 
 _hypercube_aggregate.defvjp(_hyper_fwd, _hyper_bwd)
@@ -444,10 +443,7 @@ def _pipe_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
     # single-device blocked layer.
     dx_local = _spmm_t_blocked(rows_b, cols_b, vals_b,
                                e_full.reshape(n_dst, -1), x_local.shape[0])
-    dvals = jnp.zeros_like(vals_b)   # adjacency weights are not trained
-    zr = np.zeros(rows_b.shape, dtype=jax.dtypes.float0)
-    zc = np.zeros(cols_b.shape, dtype=jax.dtypes.float0)
-    return (zr, zc, dvals, dx_local)
+    return (*zero_ct((rows_b, cols_b, vals_b)), dx_local)
 
 
 _hypercube_aggregate_pipelined.defvjp(_pipe_fwd, _pipe_bwd)
@@ -602,14 +598,14 @@ def _ell_fwd(axis_name, ndim, n_dst, n_chunks, tables, x_local):
 
 
 def _ell_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
-    from repro.kernels.ops import _zero_ct, ell_apply
+    from repro.kernels.ops import ell_apply
 
     tables = res
     # mirror schedule, same waves: all-gather the error rows double-buffered
     e_full = hypercube_allgather_pipelined(ct, axis_name, ndim, n_chunks)
     # then the column-major ELL walk of the SAME plan — scatter-free Aᵀ
     dx_local = ell_apply(tables, e_full.reshape(n_dst, -1), transpose=True)
-    return (_zero_ct(tables), dx_local)
+    return (zero_ct(tables), dx_local)
 
 
 _hypercube_aggregate_ell.defvjp(_ell_fwd, _ell_bwd)

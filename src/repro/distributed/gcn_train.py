@@ -1,28 +1,23 @@
-"""Distributed GCN training step — the paper's full architecture, deployed.
+"""Distributed GCN training — now a thin compatibility layer.
 
-One `shard_map` over the ``model`` axis (= the 16-core hypercube) realizes
-the paper end to end, per §4.1/§4.2's execution order:
+The implementation moved to :mod:`repro.engine`: one ``shard_map`` over the
+``model`` axis realizes the paper end to end (local combination GEMMs, the
+hypercube message-passing aggregation with sender-side pre-reduction, the
+transpose-free mirror backward, and the Weight-Bank ``pmean`` gradient
+sync), with the edge format (coo/block/ell) and fold schedule
+(serial/pipelined) selected declaratively::
 
-  * **combination** is a LOCAL matmul on each core's feature rows (the NUMA
-    claim: dense GEMM reads only core-local HBM at full bandwidth);
-  * **aggregation** is the hypercube message-passing layer
-    (:func:`repro.distributed.aggregate.hypercube_aggregate`): sender-side
-    pre-reduction (Block-Message merge) + log₂P `ppermute` rounds;
-  * the backward pass is the transpose-free mirror (custom_vjp inside the
-    aggregate: all-gather of the error + column-major walk of the SAME edge
-    table — no `Aᵀ`, no `Xᵀ`);
-  * **Weight Bank sync**: weights are replicated per core; their gradients
-    are `psum`'d over the hypercube after backward — the paper's
-    "system controller periodically synchronizes global parameters".
+    from repro.engine import Engine, EngineConfig
 
-Each sampled minibatch layer ships as sender-side :class:`EdgeShards`
-([P, e_max] arrays, leading axis sharded).  Orders are CoAg (combine the
-frontier first — the estimator's usual choice for wide-input layers);
-AgCo support falls out of calling aggregate before the matmul.
+    bundle = Engine(EngineConfig.from_spec("ell+pipelined", lr=0.05)) \
+        .build(mesh)
+    batch = bundle.shard_batch(mb, feats, labels)
+    params, loss = bundle.train_step(params, batch)
 
-Validated against the single-device reference in
-tests/test_distributed.py::test_distributed_gcn_matches_reference and run
-end-to-end by examples/distributed_gcn.py.
+``shard_minibatch`` / ``make_train_step`` below are the pre-Engine flag
+entry points, kept as ``DeprecationWarning`` shims that translate their
+flags into an :class:`~repro.engine.EngineConfig`.  ``init_params`` is not
+deprecated.
 """
 from __future__ import annotations
 
@@ -31,15 +26,22 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
+from repro.deprecation import warn_engine_shim as _warn_shim
 from repro.graph.sampler import MiniBatch
-from .aggregate import (hypercube_aggregate, hypercube_aggregate_ell,
-                        hypercube_aggregate_pipelined, shard_edges,
-                        shard_edges_blocked, shard_edges_ell)
 
 Params = List[Dict[str, jnp.ndarray]]
+
+#: flag-era layout names → Engine specs
+_LAYOUT_SPECS = {"flat": "coo+serial", "blocked": "block+pipelined",
+                 "ell": "ell+pipelined"}
+
+
+def _flag_spec(overlap: bool, ell: bool) -> str:
+    if ell:
+        return "ell+pipelined"
+    return "block+pipelined" if overlap else "coo+serial"
 
 
 def shard_minibatch(mb: MiniBatch, features: np.ndarray, labels: np.ndarray,
@@ -47,162 +49,47 @@ def shard_minibatch(mb: MiniBatch, features: np.ndarray, labels: np.ndarray,
                     layout: Optional[str] = None,
                     mesh: Optional[Mesh] = None,
                     axis: str = "model") -> Dict[str, Any]:
-    """Host-side: sampled minibatch → device-ready sharded arrays.
+    """Deprecated shim — ``Engine(spec).build(mesh).shard_batch(...)``.
 
-    Layers come deepest-first (matching forward consumption order); features
-    are the frontier rows (already padded to a multiple of P).
-
-    ``layout`` selects the edge format per layer:
-
-    * ``"flat"`` (default) — [P, e_max] global-row COO, serial schedule;
-    * ``"blocked"`` (or the legacy ``blocked=True``) — Block-Message tiles
-      ([P, B, eb], :func:`shard_edges_blocked`) for the bit-exact pipelined
-      schedule;
-    * ``"ell"`` — pre-reduced degree-bucketed ELL plans
-      (:func:`shard_edges_ell`, cached per graph) for the scatter-free
-      engine; pair with ``make_train_step(overlap=True, ell=True)``.
-
-    Pass ``mesh`` to commit every batch leaf to its core-axis
-    :class:`~jax.sharding.NamedSharding` once, at build time.  Uncommitted
-    arrays get re-laid-out by jit on EVERY step — per-step overhead that
-    grows with the leaf count and was the measured cause of the blocked
-    arm's ``agg_fwd_speedup < 1`` regression.  Host edge prep + placement
-    then happen once per minibatch, never per step.
+    The flag-era layout names map to Engine specs: ``"flat"`` →
+    ``"coo+serial"``, ``"blocked"`` → ``"block+pipelined"``, ``"ell"`` →
+    ``"ell+pipelined"``.
     """
+    from repro.engine import Engine, EngineConfig
+
     if layout is None:
         layout = "blocked" if blocked else "flat"
-    if mesh is not None:
-        # one transfer per leaf: numpy -> its NamedSharding directly (an
-        # asarray-then-device_put would copy everything host->device twice)
-        from .sharding import leading_axis_put
-
-        def put(a):
-            return leading_axis_put(mesh, a, axis)
-    else:
-        put = jnp.asarray
-    if layout == "ell":
-        shards = [shard_edges_ell(coo, n_cores) for coo in mb.layers]
-        edges = [jax.tree_util.tree_map(put, es.tables) for es in shards]
-    elif layout == "blocked":
-        shards = [shard_edges_blocked(coo, n_cores) for coo in mb.layers]
-        edges = [
-            {"rows": put(es.rows_local),
-             "cols": put(es.cols_local),
-             "vals": put(es.vals)}
-            for es in shards
-        ]
-    elif layout == "flat":
-        shards = [shard_edges(coo, n_cores) for coo in mb.layers]
-        edges = [
-            {"rows": put(es.rows_global),
-             "cols": put(es.cols_local),
-             "vals": put(es.vals)}
-            for es in shards
-        ]
-    else:
+    if layout not in _LAYOUT_SPECS:
         raise ValueError(f"unknown layout {layout!r}")
-    return {
-        "edges": edges,
-        "dims": [(es.n_dst, es.n_src) for es in shards],
-        "x": put(np.asarray(features, np.float32)),
-        "labels": put(np.asarray(labels, np.int32)),
-    }
-
-
-def _forward_local(params, edges, dims, x_local, ndim: int,
-                   axis: str = "model", overlap: bool = False,
-                   n_chunks: Optional[int] = None, ell: bool = False):
-    """Per-device 2..L-layer GCN forward, deepest layer first (CoAg).
-
-    ``overlap=True`` expects the Block-Message tile layout per layer and
-    runs the double-buffered aggregation (bit-equal values, pipelined
-    issue order); ``ell=True`` expects the pre-reduced ELL plan layout and
-    runs the scatter-free engine under the same pipelined fold."""
-    h = x_local
-    n_layers = len(params)
-    for l in range(n_layers - 1, -1, -1):
-        e = edges[l]
-        n_dst, _ = dims[l]
-        h = h @ params[n_layers - 1 - l]["w"]          # local combination
-        if ell:
-            lead = jax.tree_util.tree_leaves(e)[0].shape[0]
-            if lead != 1:
-                # fail loudly: stripping [0] below would silently drop the
-                # other senders' tables (the blocked path's tile-count
-                # guard, re-established for the ELL layout)
-                raise ValueError(
-                    f"ELL edge tables hold {lead} senders per device; the "
-                    "batch was built for a different core count than this "
-                    "mesh — rebuild with shard_minibatch(..., n_cores="
-                    "mesh core count)")
-            tables = jax.tree_util.tree_map(lambda a: a[0], e)
-            h = hypercube_aggregate_ell(axis, ndim, n_dst, tables, h,
-                                        n_chunks)
-        elif overlap:
-            h = hypercube_aggregate_pipelined(
-                axis, ndim, n_dst, e["rows"][0], e["cols"][0], e["vals"][0],
-                h, n_chunks)
-        else:
-            h = hypercube_aggregate(axis, ndim, n_dst,  # routed aggregation
-                                    e["rows"][0], e["cols"][0],
-                                    e["vals"][0], h)
-        if l != 0:
-            h = jnp.maximum(h, 0.0)
-    return h                                            # [batch/P, classes]
+    spec = _LAYOUT_SPECS[layout]
+    _warn_shim("shard_minibatch",
+               f'Engine("{spec}").build(mesh).shard_batch(mb, features, '
+               "labels)")
+    cfg = EngineConfig.from_spec(spec, axis=axis)
+    # old semantics preserved: n_cores drives the shard shapes, mesh only
+    # the placement — a mismatch still fails loudly at step time
+    bundle = Engine(cfg).build(mesh, n_cores=n_cores)
+    return bundle.shard_batch(mb, features, labels)
 
 
 def make_train_step(mesh: Mesh, dims: Sequence[Tuple[int, int]],
                     lr: float = 0.05, axis: str = "model", *,
                     overlap: bool = False, n_chunks: Optional[int] = None,
                     ell: bool = False):
-    """Build the jitted distributed train step for fixed layer dims.
+    """Deprecated shim — ``Engine(spec).build(mesh).train_step_fn(dims)``.
 
-    step(params, batch) -> (params, loss); params replicated, batch arrays
-    sharded on their leading (core) axis.  ``overlap=True`` selects the
-    pipelined aggregation (pass ``blocked=True`` to
-    :func:`shard_minibatch`); forward AND backward then run the
-    double-buffered schedule (the backward in mirror order).  ``ell=True``
-    (pass ``layout="ell"``) runs the pre-reduced scatter-free engine under
-    the same pipelined schedule, inheriting its transpose-free backward
-    from :func:`repro.kernels.ops.ell_aggregate`'s registration.
+    The old flag pairs collapse into one spec: default → ``"coo+serial"``,
+    ``overlap=True`` → ``"block+pipelined"``, ``overlap=True, ell=True`` →
+    ``"ell+pipelined"``.
     """
-    n_cores = mesh.shape[axis]
-    ndim = int(np.log2(n_cores))
-    dims = tuple((int(a), int(b)) for a, b in dims)
+    from repro.engine import Engine, EngineConfig
 
-    def body(params, edges, x_local, labels_local):
-        def loss_fn(params):
-            logits = _forward_local(params, edges, dims, x_local, ndim,
-                                    axis, overlap, n_chunks, ell)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-            nll = -jnp.take_along_axis(logp, labels_local[:, None],
-                                       axis=-1)[:, 0]
-            # mean over the GLOBAL batch (each core owns batch/P rows)
-            return jax.lax.pmean(nll.mean(), axis)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        # Weight Bank sync: average weight grads over the hypercube
-        grads = jax.lax.pmean(grads, axis)
-        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params,
-                                        grads)
-        return params, loss
-
-    def step(params, batch):
-        # every edge leaf is stacked per core on its leading axis — derive
-        # the spec tree from the batch itself (works for all three layouts,
-        # including the ELL plan's bucketed table pytree)
-        from .sharding import leading_axis_spec
-        edge_specs = jax.tree_util.tree_map(
-            lambda a: leading_axis_spec(a, axis), batch["edges"])
-        fn = shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(P(), edge_specs, P(axis, None), P(axis)),
-            out_specs=(P(), P()),
-        )
-        return fn(params, batch["edges"], batch["x"], batch["labels"])
-
-    return jax.jit(step)
+    spec = _flag_spec(overlap, ell)
+    _warn_shim("make_train_step",
+               f'Engine(EngineConfig.from_spec("{spec}", lr={lr})).'
+               "build(mesh).train_step_fn(dims)")
+    cfg = EngineConfig.from_spec(spec, lr=lr, axis=axis, n_chunks=n_chunks)
+    return Engine(cfg).build(mesh).train_step_fn(dims)
 
 
 def init_params(key, dims_io: Sequence[Tuple[int, int]]) -> Params:

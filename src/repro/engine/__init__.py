@@ -1,0 +1,16 @@
+# The declarative Engine API — the single entry point to every aggregation
+# path (format x schedule), with a pluggable registry for new formats.
+# See README "Engine API" for the migration table from the old flag calls.
+from .config import EngineConfig
+from .engine import Engine, EngineBundle
+from .registry import (Format, Schedule, available_formats,
+                       available_schedules, get_format, get_schedule,
+                       register_format, register_schedule, supported_specs)
+from . import formats  # noqa: F401  (registers the built-in formats)
+
+__all__ = [
+    "Engine", "EngineBundle", "EngineConfig",
+    "Format", "Schedule", "register_format", "register_schedule",
+    "get_format", "get_schedule", "available_formats",
+    "available_schedules", "supported_specs",
+]

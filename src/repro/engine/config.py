@@ -1,0 +1,91 @@
+"""Declarative Engine configuration — one validated object instead of the
+old flag cloud (``overlap=``, ``ell=``, ``blocked=``, ``layout=``).
+
+An :class:`EngineConfig` names a registered format and schedule plus the
+knobs every path shares (pipelining waves, ELL autotune caps, mesh axis,
+learning rate, precision).  Validation happens at construction: unknown
+names and unsupported combinations raise ``ValueError`` listing the
+registered options, so a typo dies at config time, not three layers down
+inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+from . import registry
+
+Caps = Union[str, Sequence[int], None]
+
+#: precisions the kernels implement today (bf16 messages are a future
+#: format registration, not a silent cast)
+PRECISIONS = ("fp32",)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Declarative spec of one aggregation engine.
+
+    format:   registered edge layout — ``"coo"`` | ``"block"`` | ``"ell"``
+    schedule: registered fold issue order — ``"serial"`` | ``"pipelined"``
+              (``None`` → the format's default)
+    n_chunks: feature waves for the pipelined schedule (``None`` → the
+              backend default, :func:`repro.distributed.aggregate.default_n_chunks`)
+    caps:     ELL degree-bucket caps override (``None`` → the autotuned
+              scheme from :mod:`repro.kernels.tune`)
+    block_tiles: destination tiles for the block format's single-device
+              layer (distributed paths always tile per core instead)
+    axis:     mesh axis name that plays the paper's 16-core hypercube
+    lr:       SGD learning rate baked into ``train_step``
+    precision: accumulation precision (``"fp32"`` only today)
+    """
+
+    format: str = "coo"
+    schedule: Optional[str] = None
+    n_chunks: Optional[int] = None
+    caps: Caps = None
+    block_tiles: int = 4
+    axis: str = "model"
+    lr: float = 0.05
+    precision: str = "fp32"
+
+    def __post_init__(self):
+        fmt = registry.get_format(self.format)
+        if self.schedule is None:
+            object.__setattr__(self, "schedule", fmt.default_schedule)
+        registry.validate_combo(self.format, self.schedule)
+        if self.n_chunks is not None and int(self.n_chunks) < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
+        if self.block_tiles < 1:
+            raise ValueError(
+                f"block_tiles must be >= 1, got {self.block_tiles}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"supported: {list(PRECISIONS)}")
+        if self.caps is not None and not isinstance(self.caps, str):
+            object.__setattr__(self, "caps", tuple(int(c) for c in self.caps))
+
+    @classmethod
+    def from_spec(cls, spec: str, **overrides) -> "EngineConfig":
+        """Parse ``"ell+pipelined"`` / ``"coo"`` into a validated config.
+
+        The spec is ``format[+schedule]``; a bare format takes its default
+        schedule.  ``overrides`` set the remaining knobs (``n_chunks=4``,
+        ``lr=0.1``, ...).
+        """
+        parts = [p.strip() for p in spec.split("+")]
+        if not 1 <= len(parts) <= 2 or not all(parts):
+            raise ValueError(
+                f"bad engine spec {spec!r}: expected 'format' or "
+                f"'format+schedule'; valid specs: "
+                f"{registry.supported_specs()}")
+        kw = dict(overrides)
+        kw["format"] = parts[0]
+        if len(parts) == 2:
+            kw["schedule"] = parts[1]
+        return cls(**kw)
+
+    @property
+    def spec(self) -> str:
+        """The canonical ``"format+schedule"`` string of this config."""
+        return f"{self.format}+{self.schedule}"

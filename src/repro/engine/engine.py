@@ -1,0 +1,321 @@
+"""The Engine — one declarative entry point for every aggregation path.
+
+``Engine(EngineConfig(...))`` (or ``Engine("ell+pipelined")``) resolves the
+registered format and schedule once; ``engine.build(mesh)`` returns an
+:class:`EngineBundle` — the compiled surface everything runs through:
+
+    eng = Engine("ell+pipelined")
+    bundle = eng.build(mesh)                       # mesh = the core axis
+    batch = bundle.shard_batch(mb, feats, labels)  # host prep + placement
+    params, loss = bundle.train_step(params, batch)
+    y = bundle.aggregate(x, graph=coo)             # y = A @ x, distributed
+
+The bundle owns the jit caches (one compiled step/forward per layer-dims
+signature, one aggregator per graph), commits every batch leaf to its
+core-axis sharding at build time (placement once per minibatch — the fix
+for the measured re-layout-per-step regression), and derives ``shard_map``
+specs from the batch pytree itself so any format's leaf structure works.
+
+Single-device use needs no mesh: ``eng.layer(coo, x, w)`` runs the
+format's GCN layer (layout built and cached per graph) with its
+transpose-free backward.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+
+from . import formats as _formats  # noqa: F401  (registers built-ins)
+from .config import EngineConfig
+from .registry import Format, Schedule, get_format, get_schedule
+
+Dims = Tuple[Tuple[int, int], ...]
+
+
+def _layout_cache_key(coo, *extra) -> tuple:
+    from repro.kernels import edgeplan
+    return edgeplan.coo_key(coo, "engine", *extra)
+
+
+class Engine:
+    """Resolved (format, schedule) pair + the builders around them."""
+
+    def __init__(self, config: Union[EngineConfig, str]):
+        if isinstance(config, str):
+            config = EngineConfig.from_spec(config)
+        self.config: EngineConfig = config
+        self.format: Format = get_format(config.format)
+        self.schedule: Schedule = get_schedule(config.schedule)
+
+    @property
+    def spec(self) -> str:
+        return self.config.spec
+
+    # -- single-device layer ------------------------------------------------
+    def layout(self, graph):
+        """This format's single-device layout for ``graph`` (cached per COO
+        identity when the graph is concrete; tracers build uncached)."""
+        build = lambda: self.format.build_local(graph, self.config)  # noqa: E731
+        if isinstance(graph.rows, jax.core.Tracer):
+            if not self.format.traceable:
+                raise ValueError(
+                    f"format {self.config.format!r} builds its layout "
+                    "host-side and cannot run on a traced graph (e.g. "
+                    "inside jit over sampled COO layers); build the layout "
+                    "outside the trace, or use a traceable format such as "
+                    '"coo"')
+            # inside a trace there is no stable identity to cache on
+            return build()
+        if not self.format.cache_layouts:
+            return build()
+        from repro.kernels import edgeplan
+        key = _layout_cache_key(graph, self.config.format, self.config.caps,
+                                self.config.block_tiles)
+        return edgeplan.cached(key, (graph.rows, graph.cols, graph.vals),
+                               build)
+
+    def layer(self, graph, x: jnp.ndarray, w: jnp.ndarray, *,
+              order: str = "coag", activate: bool = True) -> jnp.ndarray:
+        """Single-device GCN layer through this engine's format: layout
+        build (cached), forward kernel, transpose-free backward."""
+        return self.format.layer(self.layout(graph), x, w, order=order,
+                                 activate=activate)
+
+    # -- distributed bundle --------------------------------------------------
+    def build(self, mesh: Optional[Mesh] = None, *, graph=None,
+              n_cores: Optional[int] = None) -> "EngineBundle":
+        """Compile-ready bundle for ``mesh`` (``None`` + ``n_cores`` builds
+        host-side shards without committing placement — single-process
+        use).  ``graph`` pre-binds a default COO for ``aggregate``.  An
+        explicit ``n_cores`` overrides the mesh-derived core count (shard
+        shapes vs placement mesh — a mismatch fails loudly at step time).
+        """
+        if n_cores is None:
+            if mesh is None:
+                raise ValueError("Engine.build needs a mesh or n_cores")
+            n_cores = int(mesh.shape[self.config.axis])
+        if n_cores & (n_cores - 1):
+            raise ValueError(
+                f"the hypercube schedule needs a power-of-two core count, "
+                f"got {n_cores}")
+        return EngineBundle(engine=self, mesh=mesh, n_cores=n_cores,
+                            graph=graph)
+
+
+class EngineBundle:
+    """Everything a training/benchmark loop calls, for one (engine, mesh).
+
+    Public surface (the issue's contract): :meth:`train_step`,
+    :meth:`forward`, :meth:`aggregate`, :meth:`shard_batch` — plus the
+    explicit builders (:meth:`train_step_fn`, :meth:`forward_fn`,
+    :meth:`aggregator`) when a caller wants the jitted callable itself.
+    """
+
+    def __init__(self, engine: Engine, mesh: Optional[Mesh],
+                 n_cores: int, graph=None):
+        self.engine = engine
+        self.config = engine.config
+        self.format = engine.format
+        self.schedule = engine.schedule
+        self.mesh = mesh
+        self.n_cores = n_cores
+        self.ndim = int(np.log2(n_cores))
+        self.axis = self.config.axis
+        self.graph = graph
+        self.n_chunks = self.schedule.resolve_n_chunks(self.config.n_chunks)
+        self._steps: Dict[Dims, Any] = {}
+        self._forwards: Dict[Dims, Any] = {}
+
+    # -- host-side batch prep ------------------------------------------------
+    def shard_batch(self, mb, features: np.ndarray, labels: np.ndarray
+                    ) -> Dict[str, Any]:
+        """Sampled minibatch → device-ready sharded arrays.
+
+        ``mb.layers`` are per-hop COOs deepest-first; ``features`` the
+        frontier rows (padded to a multiple of P).  Every leaf is committed
+        to its core-axis :class:`~jax.sharding.NamedSharding` when the
+        bundle has a mesh — placement happens once per minibatch, never per
+        step (uncommitted arrays get re-laid-out by jit on EVERY step, the
+        measured cause of a past ``agg_fwd_speedup < 1`` regression).
+        """
+        if self.mesh is not None:
+            from repro.distributed.sharding import leading_axis_put
+
+            def put(a):
+                return leading_axis_put(self.mesh, a, self.axis)
+        else:
+            put = jnp.asarray
+        edges, dims = [], []
+        for coo in mb.layers:
+            leaves, n_dst, n_src = self.format.shard(coo, self.n_cores,
+                                                     self.config)
+            edges.append(jax.tree_util.tree_map(put, leaves))
+            dims.append((n_dst, n_src))
+        return {
+            "edges": edges,
+            "dims": dims,
+            "x": put(np.asarray(features, np.float32)),
+            "labels": put(np.asarray(labels, np.int32)),
+        }
+
+    # -- per-device forward (inside shard_map) -------------------------------
+    def _forward_local(self, params, edges, dims: Dims, x_local):
+        """2..L-layer GCN forward, deepest layer first (CoAg order): local
+        combination matmul, then this format's aggregation under this
+        schedule."""
+        h = x_local
+        n_layers = len(params)
+        for l in range(n_layers - 1, -1, -1):
+            n_dst, _ = dims[l]
+            h = h @ params[n_layers - 1 - l]["w"]      # local combination
+            h = self.format.device_aggregate(
+                self.config.schedule, self.axis, self.ndim, n_dst,
+                edges[l], h, self.n_chunks)
+            if l != 0:
+                h = jnp.maximum(h, 0.0)
+        return h                                       # [batch/P, classes]
+
+    def _require_mesh(self, what: str) -> Mesh:
+        if self.mesh is None:
+            raise ValueError(f"{what} needs a mesh — rebuild with "
+                             "Engine.build(mesh)")
+        return self.mesh
+
+    def _edge_specs(self, edges):
+        from repro.distributed.sharding import leading_axis_spec
+        return jax.tree_util.tree_map(
+            lambda a: leading_axis_spec(a, self.axis), edges)
+
+    @staticmethod
+    def _dims_key(dims) -> Dims:
+        return tuple((int(a), int(b)) for a, b in dims)
+
+    # -- training -------------------------------------------------------------
+    def train_step_fn(self, dims: Sequence[Tuple[int, int]]):
+        """Jitted ``step(params, batch) -> (params, loss)`` for fixed layer
+        dims; params replicated, batch leaves sharded on their leading
+        (core) axis.  Weight gradients are ``pmean``'d over the hypercube
+        (the paper's Weight Bank sync) and applied with SGD at
+        ``config.lr``."""
+        dims = self._dims_key(dims)
+        step = self._steps.get(dims)
+        if step is not None:
+            return step
+        mesh = self._require_mesh("train_step")
+        axis, lr = self.axis, self.config.lr
+
+        def body(params, edges, x_local, labels_local):
+            def loss_fn(params):
+                logits = self._forward_local(params, edges, dims, x_local)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                nll = -jnp.take_along_axis(logp, labels_local[:, None],
+                                           axis=-1)[:, 0]
+                # mean over the GLOBAL batch (each core owns batch/P rows)
+                return jax.lax.pmean(nll.mean(), axis)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            # Weight Bank sync: average weight grads over the hypercube
+            grads = jax.lax.pmean(grads, axis)
+            params = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                            params, grads)
+            return params, loss
+
+        def step(params, batch):
+            fn = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), self._edge_specs(batch["edges"]),
+                          P(axis, None), P(axis)),
+                out_specs=(P(), P()))
+            return fn(params, batch["edges"], batch["x"], batch["labels"])
+
+        step = jax.jit(step)
+        self._steps[dims] = step
+        return step
+
+    def train_step(self, params, batch):
+        """``(params, loss) = step(params, batch)`` — compiled per the
+        batch's layer-dims signature and cached on the bundle."""
+        return self.train_step_fn(batch["dims"])(params, batch)
+
+    # -- inference -------------------------------------------------------------
+    def forward_fn(self, dims: Sequence[Tuple[int, int]]):
+        """Jitted ``forward(params, batch) -> logits`` (global rows)."""
+        dims = self._dims_key(dims)
+        fwd = self._forwards.get(dims)
+        if fwd is not None:
+            return fwd
+        mesh = self._require_mesh("forward")
+        axis = self.axis
+
+        def body(params, edges, x_local):
+            return self._forward_local(params, edges, dims, x_local)
+
+        def fwd(params, batch):
+            fn = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), self._edge_specs(batch["edges"]),
+                          P(axis, None)),
+                out_specs=P(axis, None))
+            return fn(params, batch["edges"], batch["x"])
+
+        fwd = jax.jit(fwd)
+        self._forwards[dims] = fwd
+        return fwd
+
+    def forward(self, params, batch):
+        return self.forward_fn(batch["dims"])(params, batch)
+
+    # -- raw distributed aggregation -------------------------------------------
+    def aggregator(self, graph=None):
+        """Jitted ``y = A @ x`` over the mesh for one COO: edge shards built
+        host-side, committed to their core-axis sharding once, and closed
+        over — the returned callable takes only the global ``x`` and is
+        freely differentiable (the format's transpose-free backward).
+        Cached per (graph identity, engine spec, mesh) in the shared
+        ``edgeplan`` LRU, which pins the graph's arrays (and this mesh)
+        alive so id reuse can never alias two graphs."""
+        from repro.kernels import edgeplan
+
+        coo = graph if graph is not None else self.graph
+        if coo is None:
+            raise ValueError("no graph: pass one to aggregator()/aggregate()"
+                             " or to Engine.build(graph=...)")
+        mesh = self._require_mesh("aggregate")
+        key = _layout_cache_key(coo, "agg", self.config.spec, self.n_cores,
+                                self.axis, self.config.caps, self.n_chunks,
+                                id(mesh))
+        return edgeplan.cached(key, (coo.rows, coo.cols, coo.vals, mesh),
+                               lambda: self._build_aggregator(coo, mesh))
+
+    def _build_aggregator(self, coo, mesh: Mesh):
+        from repro.distributed.sharding import leading_axis_put
+
+        leaves, n_dst, _ = self.format.shard(coo, self.n_cores, self.config)
+        leaves = jax.tree_util.tree_map(
+            lambda a: leading_axis_put(mesh, a, self.axis), leaves)
+
+        def body(edge_leaves, x_local):
+            return self.format.device_aggregate(
+                self.config.schedule, self.axis, self.ndim, n_dst,
+                edge_leaves, x_local, self.n_chunks)
+
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(self._edge_specs(leaves), P(self.axis, None)),
+            out_specs=P(self.axis, None))
+        return jax.jit(lambda x: fn(leaves, x))
+
+    def aggregate(self, x: jnp.ndarray, graph=None) -> jnp.ndarray:
+        """``y = A @ x`` through this engine's format + schedule."""
+        return self.aggregator(graph)(x)
+
+    # -- single-device layer (delegates to the engine) --------------------------
+    def layer(self, graph, x, w, *, order: str = "coag",
+              activate: bool = True):
+        return self.engine.layer(graph, x, w, order=order, activate=activate)

@@ -1,0 +1,128 @@
+"""The three built-in formats and two schedules, registered.
+
+Each format wraps the implementation that already owns its kernels and
+``custom_vjp`` backward — nothing here re-registers a vjp:
+
+  * **coo**   — flat global-row COO (:func:`repro.distributed.aggregate.
+    shard_edges` + :func:`hypercube_aggregate`; single-device layer =
+    :func:`repro.core.gcn.gcn_layer`).  Serial schedule only: it is the
+    fp32 oracle every other combo is tested against.
+  * **block** — Block-Message tiles (:func:`shard_edges_blocked` +
+    :func:`hypercube_aggregate_pipelined`; Pallas ``spmm_block`` per tile).
+    Pipelined only, and fp32 BIT-exact vs the coo oracle by construction.
+  * **ell**   — pre-reduced degree-bucketed ELL plans
+    (:func:`shard_edges_ell` + :func:`hypercube_aggregate_ell`;
+    scatter-free ``spmm_ell`` kernel pair, backward inherited from
+    :func:`repro.kernels.ops.ell_aggregate`).  Pipelined only; matches the
+    oracle to fp32 roundoff (≤1e-5 — the merge reorders additions).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import gcn as _gcn
+from repro.distributed import aggregate as _agg
+
+from .registry import Format, Schedule, register_format, register_schedule
+
+
+@register_schedule("serial")
+class SerialSchedule(Schedule):
+    description = ("log2(P) dimension-ordered hypercube fold, one wave; "
+                   "every round's wire transfer completes before its MAC "
+                   "work starts")
+
+
+@register_schedule("pipelined")
+class PipelinedSchedule(Schedule):
+    description = ("double-buffered fold: feature waves issue their "
+                   "ppermute sends before any wave's local add consumes a "
+                   "received half (paper §4.2 ping-pong Block-Message "
+                   "buffers)")
+
+    def resolve_n_chunks(self, n_chunks):
+        if n_chunks is None:
+            return _agg.default_n_chunks()
+        return int(n_chunks)
+
+
+@register_format("coo")
+class CooFormat(Format):
+    schedules = ("serial",)
+    traceable = True                 # the layout IS the COO — jits freely
+    cache_layouts = False            # identity build: nothing worth caching
+
+    def build_local(self, coo, cfg):
+        return coo
+
+    def layer(self, layout, x, w, *, order="coag", activate=True):
+        return _gcn.gcn_layer(layout, x, w, order=order, activate=activate)
+
+    def shard(self, coo, n_cores, cfg):
+        es = _agg.shard_edges(coo, n_cores)
+        return ({"rows": es.rows_global, "cols": es.cols_local,
+                 "vals": es.vals}, es.n_dst, es.n_src)
+
+    def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
+                         x_local, n_chunks):
+        return _agg.hypercube_aggregate(
+            axis_name, ndim, n_dst, leaves["rows"][0], leaves["cols"][0],
+            leaves["vals"][0], x_local)
+
+
+@register_format("block")
+class BlockFormat(Format):
+    schedules = ("pipelined",)
+
+    def build_local(self, coo, cfg):
+        from repro.core.blockmsg import dst_tiles
+        from repro.graph.partition import block_partition
+        return dst_tiles(block_partition(coo, cfg.block_tiles))
+
+    def layer(self, layout, x, w, *, order="coag", activate=True):
+        return _gcn._layer_blocked_impl(layout, x, w, order=order,
+                                        activate=activate)
+
+    def shard(self, coo, n_cores, cfg):
+        eb = _agg.shard_edges_blocked(coo, n_cores)
+        return ({"rows": eb.rows_local, "cols": eb.cols_local,
+                 "vals": eb.vals}, eb.n_dst, eb.n_src)
+
+    def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
+                         x_local, n_chunks):
+        return _agg.hypercube_aggregate_pipelined(
+            axis_name, ndim, n_dst, leaves["rows"][0], leaves["cols"][0],
+            leaves["vals"][0], x_local, n_chunks)
+
+
+@register_format("ell")
+class EllFormat(Format):
+    schedules = ("pipelined",)
+
+    def build_local(self, coo, cfg):
+        from repro.kernels import edgeplan
+        return edgeplan.build_plan(coo, caps=cfg.caps)
+
+    def layer(self, layout, x, w, *, order="coag", activate=True):
+        return _gcn._layer_ell_impl(layout, x, w, order=order,
+                                    activate=activate)
+
+    def shard(self, coo, n_cores, cfg):
+        ee = _agg.shard_edges_ell(coo, n_cores, caps=cfg.caps)
+        return (ee.tables, ee.n_dst, ee.n_src)
+
+    def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
+                         x_local, n_chunks):
+        lead = jax.tree_util.tree_leaves(leaves)[0].shape[0]
+        if lead != 1:
+            # fail loudly: stripping [0] below would silently drop the
+            # other senders' tables (the blocked path's tile-count guard,
+            # re-established for the ELL layout)
+            raise ValueError(
+                f"ELL edge tables hold {lead} senders per device; the "
+                "batch was built for a different core count than this "
+                "mesh — rebuild it with shard_batch on a bundle whose "
+                "mesh has the matching core count")
+        tables = jax.tree_util.tree_map(lambda a: a[0], leaves)
+        return _agg.hypercube_aggregate_ell(axis_name, ndim, n_dst, tables,
+                                            x_local, n_chunks)

@@ -1,0 +1,160 @@
+"""Pluggable format/schedule registry — the extension point of the Engine.
+
+A **format** owns one edge layout end to end: how a COO graph becomes that
+layout (single-device ``build_local`` and per-sender ``shard``), the kernel
+pair that walks it (forward + the transpose-free backward, registered once
+as a ``custom_vjp`` inside the implementation it wraps), and the per-device
+aggregation body the distributed train step calls inside ``shard_map``.  A
+**schedule** names an issue order for the hypercube fold (serial vs the
+double-buffered pipelined order); each format declares which schedules it
+supports.
+
+Adding a fourth format is a registration, not a cross-cutting flag::
+
+    from repro.engine import Format, register_format
+
+    @register_format("csr")
+    class CsrFormat(Format):
+        schedules = ("serial",)
+        def build_local(self, coo, cfg): ...
+        def layer(self, layout, x, w, *, order, activate): ...
+        def shard(self, coo, n_cores, cfg): ...
+        def device_aggregate(self, schedule, axis_name, ndim, n_dst,
+                             leaves, x_local, n_chunks): ...
+
+After that, ``EngineConfig(format="csr")`` / ``Engine("csr+serial")``
+reaches it everywhere — train step, benchmarks, examples — with no other
+code change.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+
+class Format:
+    """Base class for registered edge formats (see module docstring).
+
+    Subclasses override the four methods below; ``name`` is filled in by
+    :func:`register_format`.  ``schedules`` lists the supported schedule
+    names (first entry = the format's default).
+    """
+
+    name: str = "?"
+    schedules: Tuple[str, ...] = ()
+    #: True when ``build_local`` works on traced (jit-abstract) COO arrays;
+    #: layout-building formats (block tiles, ELL plans) need concrete host
+    #: arrays and must be built outside jit
+    traceable: bool = False
+    #: False when ``build_local`` is (near-)identity — caching it would
+    #: only churn the shared layout LRU and pin graph arrays for nothing
+    cache_layouts: bool = True
+
+    @property
+    def default_schedule(self) -> str:
+        return self.schedules[0]
+
+    def build_local(self, coo, cfg):
+        """COO → this format's single-device layout (cached by the Engine)."""
+        raise NotImplementedError
+
+    def layer(self, layout, x, w, *, order: str = "coag",
+              activate: bool = True):
+        """Single-device GCN layer over a ``build_local`` layout, with this
+        format's transpose-free backward."""
+        raise NotImplementedError
+
+    def shard(self, coo, n_cores: int, cfg):
+        """COO → ``(leaves, n_dst, n_src)``: a pytree of host arrays whose
+        leading axis is the sender core (what ``shard_map`` slices)."""
+        raise NotImplementedError
+
+    def device_aggregate(self, schedule: str, axis_name: str, ndim: int,
+                         n_dst: int, leaves, x_local, n_chunks):
+        """Per-device body: ``y_local = (A @ x)_local`` under ``schedule``.
+
+        ``leaves`` is this device's slice of the ``shard`` pytree (leading
+        core axis still present, length 1).  Called inside ``shard_map``.
+        """
+        raise NotImplementedError
+
+
+class Schedule:
+    """A registered issue order for the hypercube fold."""
+
+    name: str = "?"
+    description: str = ""
+
+    def resolve_n_chunks(self, n_chunks):
+        """Feature-wave count this schedule actually runs (serial: 1)."""
+        return 1
+
+
+_FORMATS: Dict[str, Format] = {}
+_SCHEDULES: Dict[str, Schedule] = {}
+
+
+def _options(kind: str, table: Dict) -> str:
+    return f"registered {kind}s: {sorted(table)}"
+
+
+def register_format(name: str) -> Callable:
+    """Class decorator: instantiate and register a :class:`Format`."""
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        if not inst.schedules:
+            raise ValueError(f"format {name!r} declares no schedules")
+        _FORMATS[name] = inst
+        return cls
+    return deco
+
+
+def register_schedule(name: str) -> Callable:
+    """Class decorator: instantiate and register a :class:`Schedule`."""
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _SCHEDULES[name] = inst
+        return cls
+    return deco
+
+
+def get_format(name: str) -> Format:
+    try:
+        return _FORMATS[name]
+    except KeyError:
+        raise ValueError(f"unknown format {name!r}; "
+                         + _options("format", _FORMATS)) from None
+
+
+def get_schedule(name: str) -> Schedule:
+    try:
+        return _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(f"unknown schedule {name!r}; "
+                         + _options("schedule", _SCHEDULES)) from None
+
+
+def available_formats() -> List[str]:
+    return sorted(_FORMATS)
+
+
+def available_schedules() -> List[str]:
+    return sorted(_SCHEDULES)
+
+
+def supported_specs() -> List[str]:
+    """Every valid ``"format+schedule"`` combination, sorted."""
+    return sorted(f"{f}+{s}" for f, fmt in _FORMATS.items()
+                  for s in fmt.schedules)
+
+
+def validate_combo(fmt: str, schedule: str) -> None:
+    """Raise ``ValueError`` (listing the options) on any invalid pair."""
+    f = get_format(fmt)
+    get_schedule(schedule)          # unknown schedule name raises here
+    if schedule not in f.schedules:
+        raise ValueError(
+            f"format {fmt!r} does not support schedule {schedule!r} "
+            f"(it supports {list(f.schedules)}); valid combinations: "
+            f"{supported_specs()}")

@@ -18,9 +18,9 @@ at the plan's dedicated zero row.  Padding must never touch real row 0.
 ``ell_aggregate`` is the one place the pre-reduced engine's ``custom_vjp``
 is registered: forward walks the plan's dst-major tables, backward walks
 the column-major tables of the SAME edges with the SAME kernel
-(transpose-free, scatter-free).  ``repro.core.gcn.gcn_layer_ell``,
-``repro.distributed.aggregate`` and the overlapped train step all inherit
-their backward from here.
+(transpose-free, scatter-free).  The ``ell`` engine format
+(:mod:`repro.engine.formats`), ``repro.distributed.aggregate`` and the
+engine train step all inherit their backward from here.
 """
 from __future__ import annotations
 
@@ -28,7 +28,10 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+# shared zero-cotangent helper (historical local name `_zero_ct` kept for
+# existing importers)
+from repro.cotangents import zero_ct as _zero_ct
 
 from . import gemm as _gemm
 from . import spmm as _spmm
@@ -200,12 +203,6 @@ def ell_apply(tables: Dict, x: jnp.ndarray, *, transpose: bool = False,
                      use_pallas)
 
 
-def _zero_ct(tree):
-    """Zero cotangents for a plan pytree (float0 for index arrays)."""
-    return jax.tree_util.tree_map(
-        lambda a: (np.zeros(a.shape, jax.dtypes.float0)
-                   if jnp.issubdtype(a.dtype, jnp.integer)
-                   else jnp.zeros_like(a)), tree)
 
 
 @jax.custom_vjp

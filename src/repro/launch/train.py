@@ -35,13 +35,33 @@ from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
 # GCN minibatch training (paper §5.1 setup)
 # ---------------------------------------------------------------------------
 def train_gcn(dataset: str = "flickr", *, model: str = "gcn",
-              dataflow: str = "ours", scale: float = 0.01,
+              dataflow: str = "ours", engine: Optional[str] = None,
+              scale: float = 0.01,
               batch_size: int = 64, steps: int = 100, lr: float = 0.05,
               hidden: Optional[int] = None, feat_dim: Optional[int] = None,
               ckpt_dir: Optional[str] = None, resume: bool = False,
               seed: int = 0, log_every: int = 10) -> Dict[str, Any]:
+    """``engine`` is an Engine spec string (``"coo+serial"``, ...) selecting
+    the aggregation format/schedule for the 'ours' dataflow — validated
+    against the registry up front so a typo dies before the first batch.
+    This single-device trainer jits over the sampled COO layers, so only
+    trace-capable formats work here; layout-building formats (block/ell)
+    are rejected up front — they run through the distributed
+    ``Engine.build(mesh)`` path instead."""
+    if engine is not None:
+        from repro.engine import EngineConfig, get_format
+        cfg_spec = EngineConfig.from_spec(engine)  # validate, list options
+        if not get_format(cfg_spec.format).traceable:
+            raise ValueError(
+                f"engine spec {engine!r}: format {cfg_spec.format!r} builds "
+                "its layout host-side and cannot be jitted over sampled "
+                "graphs in this single-device trainer — use the "
+                "distributed path (repro.engine.Engine(spec).build(mesh)) "
+                'or a traceable format such as "coo+serial"')
     ds = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
     cfg = gcn_config(dataset, model, dataflow)
+    if engine:
+        cfg = type(cfg)(**{**cfg.__dict__, "engine": engine})
     if feat_dim:
         cfg = type(cfg)(**{**cfg.__dict__, "feat_dim": feat_dim})
     if hidden:
@@ -167,6 +187,9 @@ def main() -> None:
     g.add_argument("--dataset", default="flickr")
     g.add_argument("--model", default="gcn", choices=["gcn", "sage"])
     g.add_argument("--dataflow", default="ours", choices=["ours", "naive"])
+    g.add_argument("--engine", default=None,
+                   help="Engine spec, e.g. coo+serial (default) — see "
+                        "repro.engine.supported_specs()")
     g.add_argument("--scale", type=float, default=0.01)
     g.add_argument("--batch-size", type=int, default=64)
     g.add_argument("--steps", type=int, default=100)
@@ -185,7 +208,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.cmd == "gcn":
         out = train_gcn(args.dataset, model=args.model,
-                        dataflow=args.dataflow, scale=args.scale,
+                        dataflow=args.dataflow, engine=args.engine,
+                        scale=args.scale,
                         batch_size=args.batch_size, steps=args.steps,
                         lr=args.lr, ckpt_dir=args.ckpt_dir,
                         resume=args.resume)

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 
 from repro.core.baseline import gcn_layer_baseline
 from repro.core.estimator import LayerShape, choose_order
-from repro.core.gcn import gcn_layer
 from repro.graph.coo import COO
 
 Params = Dict[str, Any]
@@ -38,6 +37,11 @@ class GCNConfig:
     model: str = "gcn"              # 'gcn' | 'sage'  (SAGE adds a root path)
     dataflow: str = "ours"          # 'ours' | 'naive' (Table-1 baseline)
     multilabel: bool = False
+    engine: Optional[str] = None    # Engine spec for 'ours' layers, e.g.
+    #                                 "coo+serial" (the default). Formats
+    #                                 that build host-side layouts (block/
+    #                                 ell) need concrete graphs and raise
+    #                                 under jit — see Format.traceable.
 
 
 def init_gcn_params(key, cfg: GCNConfig, dtype=jnp.float32) -> Params:
@@ -65,7 +69,13 @@ def gcn_forward(params: Params, layers: Sequence[COO], x: jnp.ndarray,
                 cfg: GCNConfig, orders: Sequence[str]) -> jnp.ndarray:
     """layers[l] aggregates hop l+1 → hop l; x is the deepest hop's features.
     Iterate deepest-first (layers reversed), matching sampler.MiniBatch."""
-    layer_fn = gcn_layer if cfg.dataflow == "ours" else gcn_layer_baseline
+    if cfg.dataflow == "ours":
+        # one declarative entry point for every format x schedule; the
+        # default spec is the serial COO oracle (the paper's Table-1 "Ours")
+        from repro.engine import Engine
+        layer_fn = Engine(cfg.engine or "coo+serial").layer
+    else:
+        layer_fn = gcn_layer_baseline
     h = x
     n = len(params["layers"])
     for l in range(n - 1, -1, -1):

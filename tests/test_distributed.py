@@ -230,8 +230,8 @@ def test_distributed_gcn_matches_reference():
         import jax, numpy as np, jax.numpy as jnp
         from repro.compat import shard_map, set_mesh
         from repro.graph import NeighborSampler, make_dataset
-        from repro.distributed.gcn_train import (init_params,
-            make_train_step, shard_minibatch)
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine, EngineConfig
         from repro.models.gcn_model import GCNConfig, gcn_loss
 
         ds = make_dataset('flickr', scale=0.005, feat_dim=32)
@@ -246,13 +246,14 @@ def test_distributed_gcn_matches_reference():
         labels = ds.labels[np.pad(seeds, (0, pad))] % 7
 
         mesh = jax.make_mesh((16,), ('model',))
-        batch = shard_minibatch(mb, feats, labels, 16)
+        bundle = Engine(EngineConfig.from_spec('coo+serial',
+                                               lr=0.3)).build(mesh)
+        batch = bundle.shard_batch(mb, feats, labels)
         params = init_params(jax.random.PRNGKey(0), [(32, 16), (16, 7)])
         with set_mesh(mesh):
-            step = make_train_step(mesh, batch['dims'], lr=0.3)
-            p1, first = step(params, batch)
+            p1, first = bundle.train_step(params, batch)
             for _ in range(25):
-                p1, loss = step(p1, batch)
+                p1, loss = bundle.train_step(p1, batch)
         assert float(loss) < float(first)
 
         cfg = GCNConfig(name='t', feat_dim=32, hidden=16, n_classes=7)

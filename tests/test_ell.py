@@ -7,7 +7,8 @@ Contracts:
     path and the Pallas kernel (interpret mode off-TPU);
   * ELL padding is routed to a dedicated zero row / out-of-range fill —
     never to real row 0 — and empty destination blocks produce exact zeros;
-  * ``gcn_layer_ell`` matches the serial ``gcn_layer`` forward and grads;
+  * the ELL engine layer (``Engine("ell+pipelined").layer``) matches the
+    serial ``gcn_layer`` forward and grads;
   * EdgePlans are built once per graph and cached on the COO identity;
   * the distributed ELL aggregate matches the serial hypercube aggregate
     to ≤1e-5 abs (fp32) on 2/4/8 simulated devices, and the overlapped ELL
@@ -148,23 +149,23 @@ def test_coo_out_of_range_padding_cols_are_noops(rng):
 
 
 # ---------------------------------------------------------------------------
-# Layer-level: gcn_layer_ell vs the serial transpose-free layer.
+# Layer-level: the ELL engine layer vs the serial transpose-free layer.
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("order", ["coag", "agco"])
 @pytest.mark.parametrize("activate", [True, False])
-def test_gcn_layer_ell_matches_reference(rng, order, activate):
+def test_ell_engine_layer_matches_reference(rng, order, activate):
     import jax
     import jax.numpy as jnp
-    from repro.core.gcn import gcn_layer, gcn_layer_ell
-    from repro.kernels import edgeplan
+    from repro.core.gcn import gcn_layer
+    from repro.engine import Engine
 
     n_dst, n_src, d, h, e = 64, 96, 24, 12, 700
     coo = _skewed_coo(rng, n_dst, n_src, e)
-    plan = edgeplan.build_plan(coo)
+    eng = Engine("ell+pipelined")
     x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((d, h)), jnp.float32)
     y_ref = gcn_layer(coo, x, w, order=order, activate=activate)
-    y_ell = gcn_layer_ell(plan, x, w, order=order, activate=activate)
+    y_ell = eng.layer(coo, x, w, order=order, activate=activate)
     np.testing.assert_allclose(np.asarray(y_ell), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
 
@@ -173,8 +174,8 @@ def test_gcn_layer_ell_matches_reference(rng, order, activate):
 
     g_ref = jax.grad(loss(lambda x, w: gcn_layer(
         coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
-    g_ell = jax.grad(loss(lambda x, w: gcn_layer_ell(
-        plan, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
+    g_ell = jax.grad(loss(lambda x, w: eng.layer(
+        coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
     for a, b in zip(g_ref, g_ell):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),
                                    rtol=2e-3, atol=2e-3)
@@ -312,8 +313,8 @@ def test_ell_mesh_mismatch_fails_loudly():
     re-established for the ELL layout)."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np
-        from repro.distributed.gcn_train import (init_params,
-            make_train_step, shard_minibatch)
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine
         from repro.graph.coo import from_edges
 
         rng = np.random.default_rng(0)
@@ -326,9 +327,10 @@ def test_ell_mesh_mismatch_fails_loudly():
 
         feats = rng.standard_normal((64, 8)).astype(np.float32)
         labels = rng.integers(0, 4, 32).astype(np.int32)
-        batch = shard_minibatch(_MB(), feats, labels, 8, layout='ell')
+        eng = Engine('ell+pipelined')
+        batch = eng.build(n_cores=8).shard_batch(_MB(), feats, labels)
         mesh = jax.make_mesh((4,), ('model',))
-        step = make_train_step(mesh, batch['dims'], overlap=True, ell=True)
+        step = eng.build(mesh).train_step_fn(batch['dims'])
         params = init_params(jax.random.PRNGKey(0), [(8, 4)])
         try:
             step(params, batch)
@@ -341,13 +343,13 @@ def test_ell_mesh_mismatch_fails_loudly():
 
 
 def test_ell_train_step_matches_serial():
-    """make_train_step(overlap=True, ell=True) tracks the serial loss
-    trajectory (≤1e-5; the merge reorders fp32 adds)."""
+    """The ell+pipelined engine tracks the coo+serial loss trajectory
+    (≤1e-5; the merge reorders fp32 adds)."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
         from repro.graph import NeighborSampler, make_dataset
-        from repro.distributed.gcn_train import (init_params,
-            make_train_step, shard_minibatch)
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine, EngineConfig
 
         ds = make_dataset('flickr', scale=0.005, feat_dim=32)
         sampler = NeighborSampler(ds.graph, fanouts=(5, 5),
@@ -362,16 +364,16 @@ def test_ell_train_step_matches_serial():
 
         mesh = jax.make_mesh((8,), ('model',))
         params = init_params(jax.random.PRNGKey(0), [(32, 16), (16, 7)])
-        b_ser = shard_minibatch(mb, feats, labels, 8, mesh=mesh)
-        b_ell = shard_minibatch(mb, feats, labels, 8, layout='ell',
-                                mesh=mesh)
-        s_ser = make_train_step(mesh, b_ser['dims'], lr=0.3)
-        s_ell = make_train_step(mesh, b_ell['dims'], lr=0.3, overlap=True,
-                                ell=True, n_chunks=2)
+        ser = Engine(EngineConfig.from_spec('coo+serial',
+                                            lr=0.3)).build(mesh)
+        ell = Engine(EngineConfig.from_spec('ell+pipelined', lr=0.3,
+                                            n_chunks=2)).build(mesh)
+        b_ser = ser.shard_batch(mb, feats, labels)
+        b_ell = ell.shard_batch(mb, feats, labels)
         p1, p2 = params, params
         for i in range(5):
-            p1, l1 = s_ser(p1, b_ser)
-            p2, l2 = s_ell(p2, b_ell)
+            p1, l1 = ser.train_step(p1, b_ser)
+            p2, l2 = ell.train_step(p2, b_ell)
             assert abs(float(l1) - float(l2)) < 1e-5, (i, float(l1),
                                                        float(l2))
         print('OK', float(l1))

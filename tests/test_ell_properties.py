@@ -70,14 +70,14 @@ def test_ell_pallas_kernel_matches_oracle(seed, n_dst, n_src, e, hub_frac):
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.sampled_from(["coag", "agco"]),
        st.booleans())
-def test_gcn_layer_ell_grads_match(seed, order, activate):
+def test_ell_engine_layer_grads_match(seed, order, activate):
     import jax
     import jax.numpy as jnp
-    from repro.core.gcn import gcn_layer, gcn_layer_ell
-    from repro.kernels import edgeplan
+    from repro.core.gcn import gcn_layer
+    from repro.engine import Engine
 
     coo, rng = _random_skewed_coo(seed, 48, 56, 500, 0.3)
-    plan = edgeplan.build_plan(coo)
+    eng = Engine("ell+pipelined")
     x = jnp.asarray(rng.standard_normal((56, 13)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((13, 7)), jnp.float32)
 
@@ -85,13 +85,13 @@ def test_gcn_layer_ell_grads_match(seed, order, activate):
         return lambda x, w: jnp.sum(fn(x, w) ** 2)
 
     y_ref = gcn_layer(coo, x, w, order=order, activate=activate)
-    y_ell = gcn_layer_ell(plan, x, w, order=order, activate=activate)
+    y_ell = eng.layer(coo, x, w, order=order, activate=activate)
     np.testing.assert_allclose(np.asarray(y_ell), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
     g_ref = jax.grad(loss(lambda x, w: gcn_layer(
         coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
-    g_ell = jax.grad(loss(lambda x, w: gcn_layer_ell(
-        plan, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
+    g_ell = jax.grad(loss(lambda x, w: eng.layer(
+        coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
     for a, b in zip(g_ref, g_ell):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),
                                    rtol=2e-3, atol=2e-3)

@@ -1,0 +1,383 @@
+"""The declarative Engine API: config validation, the pluggable registry,
+format×schedule parity against the serial COO oracle, and the deprecation
+shims over the old flag entry points.
+
+Contracts:
+  * unknown format/schedule names and unsupported combinations raise
+    ``ValueError`` listing the registered options;
+  * ``EngineConfig.from_spec`` parses ``"fmt+sched"`` and bare ``"fmt"``
+    (default schedule) and round-trips through ``.spec``;
+  * EVERY registered format×schedule combination matches the ``coo+serial``
+    oracle to ≤1e-5 on 2 and 4 simulated devices — aggregate forward,
+    aggregate gradient, and the full train-step loss;
+  * a new format registers with ``@register_format`` and is immediately
+    reachable via ``Engine``/``supported_specs`` (the ~100-line-extension
+    contract);
+  * the old flag API (``shard_minibatch``/``make_train_step``/
+    ``gcn_layer_blocked``/``gcn_layer_ell``) still works but emits
+    ``DeprecationWarning`` (which pytest escalates to an error for any
+    in-repo caller outside ``pytest.warns``).
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+
+def _toy_coo(rng, n_dst=32, n_src=64, e=300):
+    from repro.graph.coo import from_edges
+    return from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                      rng.standard_normal(e).astype(np.float32),
+                      n_dst, n_src)
+
+
+# ---------------------------------------------------------------------------
+# Config + registry validation.
+# ---------------------------------------------------------------------------
+def test_from_spec_parses_and_roundtrips():
+    from repro.engine import Engine, EngineConfig
+
+    cfg = EngineConfig.from_spec("ell+pipelined", lr=0.1, n_chunks=3)
+    assert (cfg.format, cfg.schedule, cfg.lr, cfg.n_chunks) == \
+        ("ell", "pipelined", 0.1, 3)
+    assert cfg.spec == "ell+pipelined"
+    # bare format name takes the format's default schedule
+    assert EngineConfig.from_spec("coo").spec == "coo+serial"
+    assert Engine("block").spec == "block+pipelined"
+
+
+def test_supported_specs_lists_all_builtin_combos():
+    from repro.engine import supported_specs
+
+    assert set(supported_specs()) >= {"coo+serial", "block+pipelined",
+                                      "ell+pipelined"}
+
+
+@pytest.mark.parametrize("bad,needle", [
+    ("csr+serial", "registered formats"),        # unknown format
+    ("coo+fast", "registered schedules"),        # unknown schedule
+    ("coo+pipelined", "valid combinations"),     # known names, bad combo
+    ("block+serial", "valid combinations"),
+    ("ell+serial", "valid combinations"),
+    ("coo+serial+extra", "valid specs"),         # malformed spec string
+    ("", "valid specs"),
+])
+def test_invalid_specs_raise_listing_options(bad, needle):
+    from repro.engine import EngineConfig
+
+    with pytest.raises(ValueError, match=needle):
+        EngineConfig.from_spec(bad)
+
+
+def test_invalid_knobs_raise():
+    from repro.engine import EngineConfig
+
+    with pytest.raises(ValueError, match="n_chunks"):
+        EngineConfig(format="ell", n_chunks=0)
+    with pytest.raises(ValueError, match="precision"):
+        EngineConfig(precision="fp8")
+    with pytest.raises(ValueError, match="block_tiles"):
+        EngineConfig(format="block", block_tiles=0)
+
+
+def test_engine_build_needs_power_of_two_cores():
+    from repro.engine import Engine
+
+    with pytest.raises(ValueError, match="power-of-two"):
+        Engine("coo").build(n_cores=3)
+    with pytest.raises(ValueError, match="mesh or n_cores"):
+        Engine("coo").build()
+
+
+def test_register_new_format_is_reachable(rng):
+    """The extension contract: a fresh registration is immediately usable
+    through Engine/EngineConfig with no other code change."""
+    import jax.numpy as jnp
+    from repro.engine import (Engine, EngineConfig, available_formats,
+                              register_format, supported_specs)
+    from repro.engine.formats import CooFormat
+    from repro.engine.registry import _FORMATS
+
+    @register_format("coo-twin")
+    class CooTwin(CooFormat):
+        """Same layout/kernels as coo — registered under a new name."""
+
+    try:
+        assert "coo-twin" in available_formats()
+        assert "coo-twin+serial" in supported_specs()
+        coo = _toy_coo(rng)
+        x = jnp.asarray(rng.standard_normal((coo.n_src, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+        y_twin = Engine("coo-twin").layer(coo, x, w)
+        y_ref = Engine("coo").layer(coo, x, w)
+        assert np.array_equal(np.asarray(y_twin), np.asarray(y_ref))
+        # unsupported schedule on the new format still validates properly
+        with pytest.raises(ValueError, match="valid combinations"):
+            EngineConfig.from_spec("coo-twin+pipelined")
+    finally:
+        _FORMATS.pop("coo-twin", None)
+
+
+# ---------------------------------------------------------------------------
+# Parity: every registered combo vs the serial COO oracle, 2/4 devices.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_every_combo_matches_serial_oracle(n_devices):
+    run_subprocess(textwrap.dedent(f"""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.engine import Engine, supported_specs
+        from repro.graph.coo import from_edges
+
+        PC = {n_devices}
+        n_dst, n_src, d, e = 16 * PC, 32 * PC, 20, 2500
+        rng = np.random.default_rng(0)
+        coo = from_edges(rng.integers(0, n_dst, e),
+                         rng.integers(0, n_src, e),
+                         rng.standard_normal(e).astype(np.float32),
+                         n_dst, n_src)
+        x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+        mesh = jax.make_mesh((PC,), ('model',))
+        oracle = Engine('coo+serial').build(mesh, graph=coo)
+        ref = np.asarray(oracle.aggregate(x))
+        np.testing.assert_allclose(ref, np.asarray(coo.matmul(x)),
+                                   rtol=2e-4, atol=2e-4)
+        g_ref = np.asarray(jax.grad(
+            lambda xx: jnp.sum(coo.matmul(xx) ** 2))(x))
+        specs = supported_specs()
+        assert len(specs) >= 3, specs
+        for spec in specs:
+            b = Engine(spec).build(mesh, graph=coo)
+            y = np.asarray(b.aggregate(x))
+            err = np.abs(y - ref).max()
+            assert err <= 1e-5, (spec, err)
+            g = np.asarray(jax.grad(
+                lambda xx: jnp.sum(b.aggregator()(xx) ** 2))(x))
+            np.testing.assert_allclose(g, g_ref, rtol=2e-3, atol=2e-3,
+                                       err_msg=spec)
+        print('OK', specs)
+    """), n_devices=n_devices)
+
+
+def test_every_combo_train_step_matches_oracle_loss():
+    """Full train-step parity: every registered spec's first-step loss and
+    5-step trajectory stay within 1e-5 of the coo+serial oracle."""
+    run_subprocess(textwrap.dedent("""
+        import jax, numpy as np
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine, EngineConfig, supported_specs
+        from repro.graph.coo import from_edges
+
+        PC = 4
+        rng = np.random.default_rng(0)
+        n_mid, n_src = 32, 128
+
+        class _MB:
+            layers = [from_edges(rng.integers(0, n_mid, 400),
+                                 rng.integers(0, n_src, 400),
+                                 np.abs(rng.standard_normal(400)
+                                        ).astype(np.float32) + 0.1,
+                                 n_mid, n_src)]
+
+        feats = rng.standard_normal((n_src, 8)).astype(np.float32)
+        labels = rng.integers(0, 4, n_mid).astype(np.int32)
+        mesh = jax.make_mesh((PC,), ('model',))
+        params0 = init_params(jax.random.PRNGKey(0), [(8, 4)])
+        losses = {}
+        for spec in supported_specs():
+            bundle = Engine(EngineConfig.from_spec(spec,
+                                                   lr=0.3)).build(mesh)
+            b = bundle.shard_batch(_MB(), feats, labels)
+            p = params0
+            traj = []
+            for _ in range(5):
+                p, loss = bundle.train_step(p, b)
+                traj.append(float(loss))
+            losses[spec] = traj
+        ref = losses['coo+serial']
+        for spec, traj in losses.items():
+            for i, (a, b_) in enumerate(zip(ref, traj)):
+                assert abs(a - b_) <= 1e-5, (spec, i, a, b_)
+        print('OK', {k: round(v[-1], 5) for k, v in losses.items()})
+    """), n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: the old flag API still works — and warns.
+# ---------------------------------------------------------------------------
+def test_flag_shims_work_and_warn(rng):
+    import jax
+    from repro.distributed.gcn_train import (init_params, make_train_step,
+                                             shard_minibatch)
+    from repro.engine import Engine, EngineConfig
+
+    coo = _toy_coo(rng)
+
+    class _MB:
+        layers = [coo]
+
+    feats = rng.standard_normal((coo.n_src, 8)).astype(np.float32)
+    labels = rng.integers(0, 4, coo.n_dst).astype(np.int32)
+    mesh = jax.make_mesh((1,), ("model",))
+    params = init_params(jax.random.PRNGKey(0), [(8, 4)])
+    # engine reference (the supported path)
+    bundle = Engine(EngineConfig.from_spec("coo+serial", lr=0.05)) \
+        .build(mesh)
+    b_ref = bundle.shard_batch(_MB(), feats, labels)
+    _, l_ref = bundle.train_step(params, b_ref)
+    # legacy flag path: same numbers, plus a DeprecationWarning each
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        batch = shard_minibatch(_MB(), feats, labels, 1, mesh=mesh)
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        step = make_train_step(mesh, batch["dims"], lr=0.05)
+    _, l_old = step(params, batch)
+    assert abs(float(l_old) - float(l_ref)) < 1e-6
+    # the flag pairs map to the right specs
+    with pytest.warns(DeprecationWarning, match="ell\\+pipelined"):
+        shard_minibatch(_MB(), feats, labels, 1, layout="ell", mesh=mesh)
+    with pytest.warns(DeprecationWarning, match="block\\+pipelined"):
+        make_train_step(mesh, batch["dims"], overlap=True)
+    with pytest.raises(ValueError, match="unknown layout"):
+        shard_minibatch(_MB(), feats, labels, 1, layout="nope")
+
+
+def test_layer_shims_work_and_warn(rng):
+    import jax.numpy as jnp
+    from repro.core.blockmsg import dst_tiles
+    from repro.core.gcn import gcn_layer, gcn_layer_blocked, gcn_layer_ell
+    from repro.graph.partition import block_partition
+    from repro.kernels import edgeplan
+
+    coo = _toy_coo(rng)
+    x = jnp.asarray(rng.standard_normal((coo.n_src, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    y_ref = np.asarray(gcn_layer(coo, x, w))
+    tiles = dst_tiles(block_partition(coo, 4))
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        y_blk = gcn_layer_blocked(tiles, x, w)
+    np.testing.assert_allclose(np.asarray(y_blk), y_ref, rtol=1e-4,
+                               atol=1e-4)
+    plan = edgeplan.build_plan(coo)
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        y_ell = gcn_layer_ell(plan, x, w)
+    np.testing.assert_allclose(np.asarray(y_ell), y_ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bundle surface: forward + layout cache.
+# ---------------------------------------------------------------------------
+def test_bundle_forward_returns_global_logits():
+    run_subprocess(textwrap.dedent("""
+        import jax, numpy as np
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine
+        from repro.graph.coo import from_edges
+
+        rng = np.random.default_rng(0)
+
+        class _MB:
+            layers = [from_edges(rng.integers(0, 16, 100),
+                                 rng.integers(0, 64, 100),
+                                 rng.standard_normal(100).astype(np.float32),
+                                 16, 64)]
+
+        feats = rng.standard_normal((64, 8)).astype(np.float32)
+        labels = rng.integers(0, 4, 16).astype(np.int32)
+        mesh = jax.make_mesh((2,), ('model',))
+        bundle = Engine('ell+pipelined').build(mesh)
+        b = bundle.shard_batch(_MB(), feats, labels)
+        params = init_params(jax.random.PRNGKey(0), [(8, 4)])
+        logits = bundle.forward(params, b)
+        assert logits.shape == (16, 4), logits.shape
+        print('OK')
+    """), n_devices=2)
+
+
+def test_non_traceable_format_rejected_under_jit(rng):
+    """block/ell layouts build host-side: a traced graph must raise the
+    explanatory error, not a numpy-on-tracer crash."""
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import Engine
+
+    coo = _toy_coo(rng)
+    x = jnp.asarray(rng.standard_normal((coo.n_src, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    eng = Engine("ell+pipelined")
+    with pytest.raises(ValueError, match="host-side"):
+        jax.jit(lambda c, xx, ww: eng.layer(c, xx, ww))(coo, x, w)
+    # the coo format is traceable and jits through the same entry point
+    y = jax.jit(lambda c, xx, ww: Engine("coo").layer(c, xx, ww))(coo, x, w)
+    assert y.shape == (coo.n_dst, 4)
+
+
+def test_train_gcn_rejects_layout_building_engine_specs():
+    """The single-device trainer jits over sampled graphs — a block/ell
+    spec must die at validation time, before any data loads."""
+    from repro.launch.train import train_gcn
+
+    with pytest.raises(ValueError, match="host-side"):
+        train_gcn("flickr", engine="ell+pipelined", steps=1)
+    with pytest.raises(ValueError, match="registered formats"):
+        train_gcn("flickr", engine="csr+serial", steps=1)
+
+
+def test_shim_n_cores_beats_mesh_core_count(rng):
+    """Old shard_minibatch semantics: n_cores drives the shard shapes even
+    when a (different-sized) placement mesh is passed — the mismatch then
+    fails loudly at step time, exactly like the flag era."""
+    import jax
+    from repro.distributed.gcn_train import (init_params, make_train_step,
+                                             shard_minibatch)
+
+    coo = _toy_coo(rng)
+
+    class _MB:
+        layers = [coo]
+
+    feats = rng.standard_normal((coo.n_src, 8)).astype(np.float32)
+    labels = rng.integers(0, 4, coo.n_dst).astype(np.int32)
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        batch = shard_minibatch(_MB(), feats, labels, 2, layout="ell",
+                                mesh=mesh)
+    # two senders' tables were built, as requested
+    lead = batch["edges"][0]["inv"].shape[0]
+    assert lead == 2, lead
+    with pytest.warns(DeprecationWarning, match="Engine API"):
+        step = make_train_step(mesh, batch["dims"], overlap=True, ell=True)
+    params = init_params(jax.random.PRNGKey(0), [(8, 4)])
+    with pytest.raises(ValueError, match="different core count"):
+        step(params, batch)
+
+
+def test_aggregator_cached_per_graph_identity(rng):
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import Engine
+
+    mesh = jax.make_mesh((1,), ("model",))
+    bundle = Engine("coo+serial").build(mesh)
+    coo = _toy_coo(rng)
+    agg = bundle.aggregator(coo)
+    assert bundle.aggregator(coo) is agg
+    coo2 = _toy_coo(rng)
+    assert bundle.aggregator(coo2) is not agg
+    x = jnp.asarray(rng.standard_normal((coo.n_src, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(agg(x)),
+                               np.asarray(coo.matmul(x)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_layout_is_cached_per_graph(rng):
+    from repro.engine import Engine
+
+    coo = _toy_coo(rng)
+    eng = Engine("ell+pipelined")
+    assert eng.layout(coo) is eng.layout(coo)
+    # a different engine object shares the process-wide layout cache
+    assert Engine("ell+pipelined").layout(coo) is eng.layout(coo)
+    # a different format keys separately
+    assert Engine("block+pipelined").layout(coo) is not eng.layout(coo)

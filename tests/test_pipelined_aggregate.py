@@ -85,24 +85,24 @@ def test_feature_waves_cover_and_order():
 
 @pytest.mark.parametrize("order", ["coag", "agco"])
 @pytest.mark.parametrize("activate", [True, False])
-def test_gcn_layer_blocked_matches_reference(rng, order, activate):
+def test_block_engine_layer_matches_reference(rng, order, activate):
     """The block-tile GCN layer (fwd through spmm_block, transpose-free
-    tile-walk bwd) matches the flat transpose-free layer."""
+    tile-walk bwd), reached through the Engine, matches the flat
+    transpose-free layer."""
     import jax
     import jax.numpy as jnp
-    from repro.core.blockmsg import dst_tiles
-    from repro.core.gcn import gcn_layer, gcn_layer_blocked
+    from repro.core.gcn import gcn_layer
+    from repro.engine import Engine, EngineConfig
     from repro.graph.coo import from_edges
-    from repro.graph.partition import block_partition
 
     n_dst, n_src, d, h, e = 64, 96, 24, 12, 700
     coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
                      rng.standard_normal(e).astype(np.float32), n_dst, n_src)
-    tiles = dst_tiles(block_partition(coo, 4))
+    eng = Engine(EngineConfig(format="block", block_tiles=4))
     x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((d, h)), jnp.float32)
     y_ref = gcn_layer(coo, x, w, order=order, activate=activate)
-    y_blk = gcn_layer_blocked(tiles, x, w, order=order, activate=activate)
+    y_blk = eng.layer(coo, x, w, order=order, activate=activate)
     np.testing.assert_allclose(np.asarray(y_blk), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
 
@@ -111,8 +111,8 @@ def test_gcn_layer_blocked_matches_reference(rng, order, activate):
 
     g_ref = jax.grad(loss(lambda x, w: gcn_layer(
         coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
-    g_blk = jax.grad(loss(lambda x, w: gcn_layer_blocked(
-        tiles, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
+    g_blk = jax.grad(loss(lambda x, w: eng.layer(
+        coo, x, w, order=order, activate=activate)), argnums=(0, 1))(x, w)
     for a, b in zip(g_ref, g_blk):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),
                                    rtol=2e-3, atol=2e-3)
@@ -201,13 +201,13 @@ def test_pipelined_aggregate_matches_serial(n_devices):
 
 
 def test_overlap_train_step_matches_serial():
-    """make_train_step(overlap=True) computes the same loss trajectory as
-    the serial step (Weight-Bank sync + transpose-free mirror included)."""
+    """The block+pipelined engine computes the same loss trajectory as the
+    coo+serial one (Weight-Bank sync + transpose-free mirror included)."""
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
         from repro.graph import NeighborSampler, make_dataset
-        from repro.distributed.gcn_train import (init_params,
-            make_train_step, shard_minibatch)
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import Engine, EngineConfig
 
         ds = make_dataset('flickr', scale=0.005, feat_dim=32)
         sampler = NeighborSampler(ds.graph, fanouts=(5, 5),
@@ -222,15 +222,16 @@ def test_overlap_train_step_matches_serial():
 
         mesh = jax.make_mesh((8,), ('model',))
         params = init_params(jax.random.PRNGKey(0), [(32, 16), (16, 7)])
-        b_ser = shard_minibatch(mb, feats, labels, 8)
-        b_pip = shard_minibatch(mb, feats, labels, 8, blocked=True)
-        s_ser = make_train_step(mesh, b_ser['dims'], lr=0.3)
-        s_pip = make_train_step(mesh, b_pip['dims'], lr=0.3, overlap=True,
-                                n_chunks=2)
+        ser = Engine(EngineConfig.from_spec('coo+serial',
+                                            lr=0.3)).build(mesh)
+        pip = Engine(EngineConfig.from_spec('block+pipelined', lr=0.3,
+                                            n_chunks=2)).build(mesh)
+        b_ser = ser.shard_batch(mb, feats, labels)
+        b_pip = pip.shard_batch(mb, feats, labels)
         p1, p2 = params, params
         for i in range(5):
-            p1, l1 = s_ser(p1, b_ser)
-            p2, l2 = s_pip(p2, b_pip)
+            p1, l1 = ser.train_step(p1, b_ser)
+            p2, l2 = pip.train_step(p2, b_pip)
             assert abs(float(l1) - float(l2)) < 1e-6, (i, float(l1),
                                                        float(l2))
         print('OK', float(l1))
