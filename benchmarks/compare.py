@@ -30,6 +30,10 @@ TRACKED: Dict[str, str] = {
     "overlap.agg_fwdbwd_speedup_ell": "higher",
     "spmm_block.max_abs_err": "lower",
     "spmm_ell.max_abs_err": "lower",
+    # sync-stall / prefetch-stall per step (Trainer input pipeline): a
+    # ratio of two same-host, same-run stall times, so common-mode load
+    # cancels like the paired speedups above
+    "input_pipeline.stall_reduction": "higher",
 }
 
 

@@ -19,6 +19,13 @@ pair collapsed into specs), same graph and seeds — reporting the measured
 step-time speedup per arm.  Because XLA_FLAGS must be set before jax
 imports, the arm measurement re-executes itself in a child process; results
 land in ``BENCH_overlap.json``.
+
+``--input-pipeline {sync,prefetch,both}`` measures the engine-native
+Trainer's per-step host-stall time under a synchronous vs a prefetching
+(background-thread, depth-2) input pipeline — the overlap win of taking
+sampling + per-batch layout build off the step critical path; results land
+in ``BENCH_input_pipeline.json`` and, via ``run --smoke``, in
+``BENCH_smoke.json`` under ``input_pipeline``.
 """
 from __future__ import annotations
 
@@ -397,11 +404,120 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# --input-pipeline: host-stall per step, sync vs prefetch (the Trainer's
+# async input pipeline), same stream, same spec — the overlap win recorded.
+# ---------------------------------------------------------------------------
+def measured_input_pipeline(n_cores: int = 4, spec: str = "ell+pipelined",
+                            dataset: str = "flickr", scale: float = 0.004,
+                            feat: int = 32, hidden: int = 32,
+                            batch: int = 32, steps: int = 8,
+                            warmup: int = 3, pad_multiple: int = 64,
+                            seed: int = 0,
+                            modes=("sync", "prefetch")) -> Dict:
+    """Per-step host-stall time of the engine-native Trainer under each
+    input pipeline.  ``sync`` pays sampling + per-batch layout build +
+    placement inline on the step path; ``prefetch`` runs the identical
+    work on the Trainer's producer thread (depth-2 double buffering), so
+    its stall is only the queue wait the device step failed to hide.  Both
+    modes consume the SAME deterministic batch stream (seeded pipeline),
+    so their loss trajectories must match bit-for-bit — recorded as
+    ``input_loss_match``.  Warmup steps absorb the jit compiles (shape
+    signatures are coarsened via ``pad_multiple``) and prefill the queue;
+    stall counters reset before the measured window.
+    """
+    from repro.launch.trainer import Trainer
+
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    out: Dict = {"n_cores": n_cores, "spec": spec, "dataset": dataset,
+                 "batch": batch, "steps": steps, "modes": list(modes)}
+    losses = {}
+    for mode in modes:
+        tr = Trainer(spec, dataset, n_cores=n_cores, scale=scale,
+                     feat_dim=feat, hidden=hidden, batch_size=batch,
+                     lr=0.05, seed=seed, input_pipeline=mode,
+                     pad_multiple=pad_multiple, val_batches=0)
+        try:
+            tr.train_steps(warmup)        # compile + queue prefill
+            tr.reset_stall_stats()
+            t0 = time.perf_counter()
+            losses[mode] = tr.train_steps(steps)
+            dt = time.perf_counter() - t0
+            out[f"host_stall_s_per_step_{mode}"] = tr.stall_per_step
+            out[f"s_per_step_{mode}"] = dt / steps
+        finally:
+            tr.close()
+    if len(losses) == 2:
+        a, b = (losses[m] for m in modes)
+        out["input_loss_match"] = bool(
+            max(abs(x - y) for x, y in zip(a, b)) == 0.0)
+        stall_s = out["host_stall_s_per_step_sync"]
+        stall_p = out["host_stall_s_per_step_prefetch"]
+        out["stall_reduction"] = stall_s / max(stall_p, 1e-9)
+        out["prefetch_reduces_stall"] = bool(stall_p < stall_s)
+    return out
+
+
+def run_input_pipeline_arm(n_cores: int = 4, *, smoke: bool = False,
+                           spec: str = "ell+pipelined",
+                           modes=("sync", "prefetch"),
+                           out_path: str = "BENCH_input_pipeline.json"
+                           ) -> Dict:
+    """Re-exec the input-pipeline measurement under a forced multi-device
+    backend and write ``out_path`` (same child-process pattern as
+    :func:`run_overlap_arm`: XLA_FLAGS must precede the jax import)."""
+    kwargs = {"n_cores": n_cores, "spec": spec, "modes": tuple(modes)}
+    if smoke:
+        kwargs.update(scale=0.003, feat=32, hidden=32, batch=32, steps=6,
+                      warmup=2)
+    child = (
+        "import json, sys; sys.path.insert(0, '.');"
+        "from benchmarks.epoch_time import measured_input_pipeline;"
+        f"print(json.dumps(measured_input_pipeline(**{kwargs!r})))"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_cores} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"input-pipeline arm failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"## input pipeline ({n_cores} simulated cores, {spec}): "
+          "host-stall per step, sync vs prefetch")
+    print("mode,host_stall_s_per_step,s_per_step")
+    for mode in rec["modes"]:
+        print(f"{mode},{rec[f'host_stall_s_per_step_{mode}']:.4f},"
+              f"{rec[f's_per_step_{mode}']:.4f}")
+    if "stall_reduction" in rec:
+        print(f"# prefetch cuts host stall {rec['stall_reduction']:.1f}x "
+              f"(strictly less: {rec['prefetch_reduces_stall']}, "
+              f"loss bit-match: {rec['input_loss_match']})")
+    print(f"# (wrote {out_path})")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--overlap", action="store_true",
                     help="measure the engine arms' step time vs the "
                          "coo+serial oracle")
+    ap.add_argument("--input-pipeline", choices=["sync", "prefetch", "both"],
+                    default=None,
+                    help="measure the Trainer's per-step host-stall under "
+                         "the given input pipeline(s); 'both' records the "
+                         "sync-vs-prefetch overlap win")
+    ap.add_argument("--spec", default="ell+pipelined",
+                    help="engine spec for --input-pipeline")
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes (CI): implies a quick --overlap run")
     ap.add_argument("--cores", type=int, default=8,
@@ -412,11 +528,19 @@ def main() -> None:
                          "--ell/--no-ell flag pair)")
     args = ap.parse_args()
 
+    ran = False
     if args.overlap or args.smoke:
         arms = tuple(s for s in args.arms.split(",") if s)
         run_overlap_arm(args.cores, smoke=args.smoke, arms=arms)
-        return
-    _table2_main()
+        ran = True
+    if args.input_pipeline is not None:
+        modes = ("sync", "prefetch") if args.input_pipeline == "both" \
+            else (args.input_pipeline,)
+        run_input_pipeline_arm(args.cores, smoke=args.smoke,
+                               spec=args.spec, modes=modes)
+        ran = True
+    if not ran:
+        _table2_main()
 
 
 def _table2_main() -> None:

@@ -44,8 +44,12 @@ def smoke() -> int:
 
     print(f"\n{'=' * 72}\nengine arms — coo+serial oracle vs "
           f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
-    from benchmarks.epoch_time import run_overlap_arm
+    from benchmarks.epoch_time import run_input_pipeline_arm, run_overlap_arm
     rec["overlap"] = run_overlap_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\ninput pipeline — Trainer host-stall/step, "
+          f"sync vs prefetch (toy)\n{'=' * 72}")
+    rec["input_pipeline"] = run_input_pipeline_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\nSpMM kernels vs oracle (interpret)\n{'=' * 72}")
     import numpy as np
@@ -94,6 +98,7 @@ def smoke() -> int:
         rows, regressions = compare_records(prev, rec)
         print_report(rows, regressions, 0.10)   # warn-only in CI for now
     ov = rec["overlap"]
+    ip = rec["input_pipeline"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -102,7 +107,12 @@ def smoke() -> int:
           # the acceptance gate: no regression arm ships — the ELL engine
           # must beat the serial schedule on its own hot path
           and ov["agg_fwd_speedup_ell"] > 1.0
-          and ov["agg_fwdbwd_speedup_ell"] > 1.0)
+          and ov["agg_fwdbwd_speedup_ell"] > 1.0
+          # and the async input pipeline must actually overlap: prefetch
+          # STRICTLY reduces per-step host stall vs the sync pipeline on
+          # an identical (bit-matching) batch stream
+          and ip["prefetch_reduces_stall"]
+          and ip["input_loss_match"])
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -122,6 +122,24 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[Any, Dict[str, Any], int]]:
+        """Restore the newest checkpoint: ``(tree, extra, step)``, or
+        ``None`` when the directory holds no checkpoint yet (first launch
+        with ``resume=True`` is a no-op, not an error).
+
+        The ``extra`` dict carries whatever the saver stashed — the Trainer
+        stores its progress counters and the input pipeline/prefetcher
+        state there, so restore is batch-exact even when the checkpoint was
+        taken mid-epoch with prefetched batches in flight (the prefetcher
+        reports the state of the last CONSUMED batch; see
+        ``repro.data.Prefetcher.state``)."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, like, shardings)
+        return tree, extra, step
+
     def restore(self, step: int, like: Any,
                 shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
         """Restore into the structure of ``like``; optional ``shardings``

@@ -1,6 +1,7 @@
 from .tokens import (TokenPipeline, lm_batch_specs, make_lm_batch,
                      synthetic_frames)
-from .graph_pipeline import GraphBatchPipeline
+from .graph_pipeline import GraphBatchPipeline, Prefetcher, assemble_batch
 
 __all__ = ["TokenPipeline", "lm_batch_specs", "make_lm_batch",
-           "synthetic_frames", "GraphBatchPipeline"]
+           "synthetic_frames", "GraphBatchPipeline", "Prefetcher",
+           "assemble_batch"]

@@ -1,4 +1,6 @@
-"""Graph mini-batch pipeline: sampler → static-shaped device batches.
+"""Graph mini-batch pipeline: sampler → static-shaped device batches — plus
+the background :class:`Prefetcher` that takes the host-side work off the
+step critical path.
 
 Wraps :class:`repro.graph.NeighborSampler` into the same restartable-stream
 contract as the token pipeline: the epoch permutation is derived from
@@ -6,16 +8,48 @@ contract as the token pipeline: the epoch permutation is derived from
 batches.  Shapes are padded to the per-layer static maxima so one jit trace
 serves every batch (the paper's fixed 1024-node staging serves the same
 purpose in BRAM).
+
+:class:`Prefetcher` is the software analogue of the paper's NUMA-aware
+host-side staging (§4.2–4.3): sampling + per-batch layout building +
+device placement run on a producer thread with a depth-``k`` bounded queue
+(default 2 — double buffering), so batch *i+1*'s host work overlaps batch
+*i*'s device step instead of stalling it.  It preserves the restartable
+contract: each queue slot carries the pipeline state that regenerates the
+NEXT batch, so checkpointing mid-epoch with batches in flight restores
+batch-exact.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.graph.datasets import GraphDataset
 from repro.graph.sampler import MiniBatch, NeighborSampler
+
+
+def assemble_batch(dataset: GraphDataset, sampler: NeighborSampler,
+                   seeds: np.ndarray, nnz_pad, rng: np.random.Generator
+                   ) -> Tuple[MiniBatch, np.ndarray, np.ndarray]:
+    """One sampled batch: ``(mb, features, labels)`` for ``seeds``.
+
+    THE batch-assembly rule, shared by the epoch pipeline and the
+    Trainer's validation path so padding/label semantics can never
+    diverge: frontier features are clamp-indexed, labels row-fancy-indexed
+    (single-label ``[n]`` ints and multilabel ``[n, c]`` rows alike) with
+    padded seed rows zero-padded — they index GLOBAL node 0's label, a
+    placeholder the consumer masks (train loss counts only real rows when
+    masked; val accuracy scores only the first ``len(seeds)`` rows)."""
+    mb = sampler.sample(seeds, nnz_pad=nnz_pad, rng=rng)
+    feats = dataset.features[np.minimum(mb.input_nodes,
+                                        dataset.graph.n_nodes - 1)]
+    pad = mb.layers[0].n_dst - len(seeds)
+    labels = dataset.labels[np.pad(seeds, (0, pad))]
+    return mb, feats, labels
 
 
 @dataclasses.dataclass
@@ -31,6 +65,10 @@ class GraphBatchPipeline:
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, self.epoch]))
         return rng.permutation(self.dataset.graph.n_nodes)
+
+    @property
+    def batches_per_epoch(self) -> int:
+        return self.dataset.graph.n_nodes // self.batch_size
 
     def __iter__(self) -> Iterator[Tuple[MiniBatch, np.ndarray, np.ndarray]]:
         return self
@@ -48,18 +86,8 @@ class GraphBatchPipeline:
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, self.epoch, self.batch_idx]))
         self.batch_idx += 1
-        mb = self.sampler.sample(seeds,
-                                 nnz_pad=self.sampler.static_nnz(
-                                     self.batch_size), rng=rng)
-        feats = self.dataset.features[np.minimum(
-            mb.input_nodes, self.dataset.graph.n_nodes - 1)]
-        if self.dataset.labels.ndim == 1:
-            pad = mb.layers[0].n_dst - len(seeds)
-            labels = self.dataset.labels[np.pad(seeds, (0, pad))]
-        else:
-            pad = mb.layers[0].n_dst - len(seeds)
-            labels = self.dataset.labels[np.pad(seeds, (0, pad))]
-        return mb, feats, labels
+        return assemble_batch(self.dataset, self.sampler, seeds,
+                              self.sampler.static_nnz(self.batch_size), rng)
 
     def state(self) -> Dict[str, int]:
         return {"seed": self.seed, "epoch": self.epoch,
@@ -69,3 +97,148 @@ class GraphBatchPipeline:
         self.seed = int(state["seed"])
         self.epoch = int(state["epoch"])
         self.batch_idx = int(state["batch_idx"])
+
+
+class Prefetcher:
+    """Depth-``k`` background producer over a restartable batch source.
+
+    ``source`` is any iterator with the pipeline contract (``__next__`` +
+    ``state()``/``restore()``); ``prepare`` is the per-batch host transform
+    (layout build + device placement) run ON THE PRODUCER THREAD, so by the
+    time the train loop calls ``next(prefetcher)`` the batch is device-ready
+    and the only critical-path cost is the queue pop.
+
+    Restart contract: every queue slot carries ``source.state()`` captured
+    AFTER its batch was drawn — i.e. the state that regenerates the *next*
+    batch.  ``state()`` returns the snapshot belonging to the last consumed
+    batch, so checkpoint-then-restore replays exactly the batches still in
+    flight (queued but unconsumed work is regenerated, never skipped or
+    double-consumed).
+
+    Stall accounting: ``stall_s`` accumulates the time ``__next__`` spent
+    blocked on the queue — the host time the device step could not hide.
+    A sync loop doing the same work inline would stall for the full
+    sample+build+place cost every step; the difference is the overlap win
+    the ``epoch_time --input-pipeline`` benchmark records.
+    """
+
+    _DONE = object()
+
+    def __init__(self, source, prepare: Optional[Callable[..., Any]] = None,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.source = source
+        self.prepare = prepare
+        self.depth = depth
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._consumed_state = source.state()
+        self.stall_s = 0.0
+        self.n_consumed = 0
+
+    # -- producer -----------------------------------------------------------
+    def _produce(self) -> None:
+        try:
+            while not self._stop.is_set():
+                item = next(self.source)
+                state_after = self.source.state()
+                if self.prepare is not None:
+                    item = self.prepare(*item) if isinstance(item, tuple) \
+                        else self.prepare(item)
+                # bounded put; poll the stop flag so close() never deadlocks
+                # against a full queue
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((state_after, item), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # noqa: BLE001 — re-raised on the consumer
+            self._error = e
+            # deliver the sentinel with the same retry-until-stop loop as a
+            # normal item: the queue is usually FULL when the producer dies
+            # (device step slower than host work), and dropping the
+            # sentinel there would leave the consumer blocked on get()
+            # forever with the original exception lost
+            while not self._stop.is_set():
+                try:
+                    self._q.put((None, self._DONE), timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+
+    def _ensure_started(self) -> None:
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._produce,
+                                            daemon=True)
+            self._thread.start()
+
+    # -- consumer -----------------------------------------------------------
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self):
+        self._ensure_started()
+        t0 = time.perf_counter()
+        state_after, item = self._q.get()
+        self.stall_s += time.perf_counter() - t0
+        if item is self._DONE:
+            err, self._error = self._error, None
+            self._thread = None
+            raise err if err is not None else StopIteration
+        self._consumed_state = state_after
+        self.n_consumed += 1
+        return item
+
+    def reset_stats(self) -> None:
+        self.stall_s = 0.0
+        self.n_consumed = 0
+
+    @property
+    def stall_per_step(self) -> float:
+        return self.stall_s / max(self.n_consumed, 1)
+
+    # -- restartable-stream contract ----------------------------------------
+    def state(self) -> Dict[str, int]:
+        """The source state as of the last CONSUMED batch — in-flight
+        (prefetched but unconsumed) batches are excluded, so a restore
+        regenerates them."""
+        return dict(self._consumed_state)
+
+    def restore(self, state: Dict[str, int]) -> None:
+        """Drain the queue, rewind the source, restart production lazily."""
+        self.close()
+        self.source.restore(state)
+        self._consumed_state = self.source.state()
+
+    def close(self) -> None:
+        """Stop the producer, drop any queued batches, and rewind the
+        source to the last CONSUMED batch — dropped in-flight work is
+        regenerated on the next ``__next__``, never skipped, so stop/start
+        (or checkpoint/restore) keeps the stream exact."""
+        if self._thread is not None:
+            self._stop.set()
+            while self._thread.is_alive():  # unblock a put-blocked producer
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    pass
+                self._thread.join(timeout=0.05)
+            self._thread = None
+            self._error = None
+        while True:                       # leave the queue empty for restart
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self.source.restore(self._consumed_state)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

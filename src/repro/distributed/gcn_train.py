@@ -14,10 +14,16 @@ sync), with the edge format (coo/block/ell) and fold schedule
     batch = bundle.shard_batch(mb, feats, labels)
     params, loss = bundle.train_step(params, batch)
 
+For a full training run (epoch loop, async host pipeline, validation,
+checkpoint/resume) use :class:`repro.launch.trainer.Trainer`, which drives
+exactly this bundle step — the step function is built once per layer-dims
+signature by ``bundle.train_step_fn`` and shared by the Trainer, the
+benchmarks, and any hand-rolled loop (no trainer-private step exists).
+
 ``shard_minibatch`` / ``make_train_step`` below are the pre-Engine flag
 entry points, kept as ``DeprecationWarning`` shims that translate their
 flags into an :class:`~repro.engine.EngineConfig`.  ``init_params`` is not
-deprecated.
+deprecated — it is the Trainer's parameter initializer too.
 """
 from __future__ import annotations
 

@@ -133,17 +133,39 @@ class EngineBundle:
         self._forwards: Dict[Dims, Any] = {}
 
     # -- host-side batch prep ------------------------------------------------
-    def shard_batch(self, mb, features: np.ndarray, labels: np.ndarray
-                    ) -> Dict[str, Any]:
-        """Sampled minibatch → device-ready sharded arrays.
+    def prepare_batch(self, mb, features: np.ndarray, labels: np.ndarray
+                      ) -> Dict[str, Any]:
+        """Sampled minibatch → HOST-side batch pytree (numpy leaves, no
+        device placement).
 
-        ``mb.layers`` are per-hop COOs deepest-first; ``features`` the
-        frontier rows (padded to a multiple of P).  Every leaf is committed
-        to its core-axis :class:`~jax.sharding.NamedSharding` when the
-        bundle has a mesh — placement happens once per minibatch, never per
-        step (uncommitted arrays get re-laid-out by jit on EVERY step, the
-        measured cause of a past ``agg_fwd_speedup < 1`` regression).
-        """
+        This is the expensive per-batch half — the format's layout build
+        (``Format.prepare_batch``: edge sharding, block tiling, ELL plan
+        construction) — and it is pure host work, safe to run on a prefetch
+        thread so it overlaps the previous device step.  Feed the result to
+        :meth:`commit_batch`; :meth:`shard_batch` composes the two for
+        synchronous callers."""
+        edges, dims = self.format.prepare_batch(mb, self.n_cores,
+                                                self.config)
+        labels = np.asarray(labels)
+        if labels.ndim == 2:
+            # multilabel rows → the dominant class, the single-label proxy
+            # every engine train_step shares (BCE is a loss-layer variant,
+            # not an aggregation-format concern)
+            labels = labels.argmax(-1)
+        return {
+            "edges": edges,
+            "dims": dims,
+            "x": np.asarray(features, np.float32),
+            "labels": labels.astype(np.int32),
+        }
+
+    def commit_batch(self, host_batch: Dict[str, Any]) -> Dict[str, Any]:
+        """Host batch (from :meth:`prepare_batch`) → device-ready arrays,
+        every leaf committed to its core-axis
+        :class:`~jax.sharding.NamedSharding` when the bundle has a mesh —
+        placement happens once per minibatch, never per step (uncommitted
+        arrays get re-laid-out by jit on EVERY step, the measured cause of
+        a past ``agg_fwd_speedup < 1`` regression)."""
         if self.mesh is not None:
             from repro.distributed.sharding import leading_axis_put
 
@@ -151,18 +173,24 @@ class EngineBundle:
                 return leading_axis_put(self.mesh, a, self.axis)
         else:
             put = jnp.asarray
-        edges, dims = [], []
-        for coo in mb.layers:
-            leaves, n_dst, n_src = self.format.shard(coo, self.n_cores,
-                                                     self.config)
-            edges.append(jax.tree_util.tree_map(put, leaves))
-            dims.append((n_dst, n_src))
         return {
-            "edges": edges,
-            "dims": dims,
-            "x": put(np.asarray(features, np.float32)),
-            "labels": put(np.asarray(labels, np.int32)),
+            "edges": [jax.tree_util.tree_map(put, leaves)
+                      for leaves in host_batch["edges"]],
+            "dims": host_batch["dims"],
+            "x": put(host_batch["x"]),
+            "labels": put(host_batch["labels"]),
         }
+
+    def shard_batch(self, mb, features: np.ndarray, labels: np.ndarray
+                    ) -> Dict[str, Any]:
+        """Sampled minibatch → device-ready sharded arrays.
+
+        ``mb.layers`` are per-hop COOs deepest-first; ``features`` the
+        frontier rows (padded to a multiple of P).  Synchronous composition
+        of :meth:`prepare_batch` (host layout build) and
+        :meth:`commit_batch` (one-time placement); async pipelines call the
+        two halves from their producer thread instead."""
+        return self.commit_batch(self.prepare_batch(mb, features, labels))
 
     # -- per-device forward (inside shard_map) -------------------------------
     def _forward_local(self, params, edges, dims: Dims, x_local):

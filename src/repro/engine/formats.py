@@ -1,7 +1,11 @@
 """The three built-in formats and two schedules, registered.
 
 Each format wraps the implementation that already owns its kernels and
-``custom_vjp`` backward — nothing here re-registers a vjp:
+``custom_vjp`` backward — nothing here re-registers a vjp.  All three
+inherit :meth:`Format.prepare_batch` (per-hop ``shard`` over a sampled
+``MiniBatch``) — the host-side hook the async input pipeline runs on its
+prefetch thread, which is what lets the ``traceable=False`` layouts
+(block tiles, ELL plans) train end-to-end on sampled graphs:
 
   * **coo**   — flat global-row COO (:func:`repro.distributed.aggregate.
     shard_edges` + :func:`hypercube_aggregate`; single-device layer =

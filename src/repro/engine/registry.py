@@ -68,6 +68,25 @@ class Format:
         leading axis is the sender core (what ``shard_map`` slices)."""
         raise NotImplementedError
 
+    def prepare_batch(self, mb, n_cores: int, cfg):
+        """Sampled :class:`~repro.graph.sampler.MiniBatch` → host-side edge
+        leaves: ``(edges, dims)`` with one ``shard`` pytree and one
+        ``(n_dst, n_src)`` pair per hop layer (deepest last, matching
+        ``mb.layers``).
+
+        This is the per-batch layout-build hook the async input pipeline
+        calls OFF the jit path (a prefetch thread, never inside a trace) —
+        it is how layout-building formats (block tiles, ELL plans) train on
+        sampled graphs despite ``traceable=False``.  The default walks
+        ``mb.layers`` through :meth:`shard`; a format may override it to
+        fuse work across hops."""
+        edges, dims = [], []
+        for coo in mb.layers:
+            leaves, n_dst, n_src = self.shard(coo, n_cores, cfg)
+            edges.append(leaves)
+            dims.append((n_dst, n_src))
+        return edges, dims
+
     def device_aggregate(self, schedule: str, axis_name: str, ndim: int,
                          n_dst: int, leaves, x_local, n_chunks):
         """Per-device body: ``y_local = (A @ x)_local`` under ``schedule``.

@@ -33,6 +33,7 @@ hypercube schedule.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -249,26 +250,34 @@ class EdgePlan:
 
 # Bounded plan cache.  Keys hold the id() of the source arrays; the cached
 # entry keeps a strong reference to those arrays so an id can never be
-# recycled while its key is alive.
+# recycled while its key is alive.  The lock makes it safe for the async
+# input pipeline, whose prefetch thread builds per-batch layouts while the
+# main thread may be building validation ones (builds serialize; a build is
+# per-batch-necessary work either way, never a duplicated one).
 _CACHE_CAP = 32
 _cache: "OrderedDict[tuple, Tuple[tuple, object]]" = OrderedDict()
 _stats = {"hits": 0, "misses": 0}
+# re-entrant on purpose: builders legitimately nest cached() calls (an
+# engine aggregator's builder shards edges, whose ELL build is itself
+# cached) — a plain Lock would self-deadlock there
+_cache_lock = threading.RLock()
 
 
 def cached(key: tuple, pins: tuple, builder: Callable[[], object]):
     """Memoize ``builder()`` under ``key``; ``pins`` are objects whose ids
     appear in the key (kept alive alongside the value)."""
-    hit = _cache.get(key)
-    if hit is not None:
-        _stats["hits"] += 1
-        _cache.move_to_end(key)
-        return hit[1]
-    _stats["misses"] += 1
-    value = builder()
-    _cache[key] = (pins, value)
-    if len(_cache) > _CACHE_CAP:
-        _cache.popitem(last=False)
-    return value
+    with _cache_lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _stats["hits"] += 1
+            _cache.move_to_end(key)
+            return hit[1]
+        _stats["misses"] += 1
+        value = builder()
+        _cache[key] = (pins, value)
+        if len(_cache) > _CACHE_CAP:
+            _cache.popitem(last=False)
+        return value
 
 
 def cache_stats() -> Dict[str, int]:

@@ -1,4 +1,6 @@
 # Launch-layer entry points: mesh construction, dry-run compile sweep,
-# HLO accounting, train/serve drivers.  Modules are imported directly
-# (e.g. ``repro.launch.mesh``); nothing is re-exported here to keep the
-# jax-import side effects (XLA_FLAGS in dryrun.py) explicit.
+# HLO accounting, train/serve drivers — trainer.py is the engine-native
+# distributed Trainer (async input pipeline + checkpoint/resume); train.py
+# the legacy-signature CLI over it plus the LM loop.  Modules are imported
+# directly (e.g. ``repro.launch.mesh``); nothing is re-exported here to
+# keep the jax-import side effects (XLA_FLAGS in dryrun.py) explicit.

@@ -3,9 +3,17 @@ causal-LM loop for the assigned archs — with the full fault-tolerance path:
 checkpoint/restore, health monitoring, straggler rebalancing and elastic
 resharding wired in.
 
+The GCN path is a thin wrapper over :class:`repro.launch.trainer.Trainer`
+(the engine-native loop: every registered format×schedule spec, async host
+pipeline, per-epoch validation) — kept for its stable signature and for the
+reference dataflows the Trainer does not model (``dataflow="naive"``,
+``model="sage"``), which still run the legacy jitted ``gcn_loss`` loop.
+
 CPU-runnable scales:
     PYTHONPATH=src python -m repro.launch.train gcn --dataset flickr \
         --scale 0.01 --steps 100
+    PYTHONPATH=src python -m repro.launch.train gcn --engine ell+pipelined \
+        --n-cores 1 --steps 50
     PYTHONPATH=src python -m repro.launch.train lm --arch llama3.2-1b \
         --smoke --steps 20
 """
@@ -21,7 +29,7 @@ import numpy as np
 
 from repro.checkpoint import Action, CheckpointManager, HealthMonitor
 from repro.configs import get_config, get_smoke
-from repro.configs.gcn_paper import FANOUTS, gcn_config
+from repro.configs.gcn_paper import FANOUTS, HIDDEN, gcn_config
 from repro.core.estimator import LayerShape
 from repro.data import GraphBatchPipeline, TokenPipeline
 from repro.graph import NeighborSampler, make_dataset
@@ -39,25 +47,96 @@ def train_gcn(dataset: str = "flickr", *, model: str = "gcn",
               scale: float = 0.01,
               batch_size: int = 64, steps: int = 100, lr: float = 0.05,
               hidden: Optional[int] = None, feat_dim: Optional[int] = None,
+              n_cores: int = 1, input_pipeline: str = "prefetch",
               ckpt_dir: Optional[str] = None, resume: bool = False,
               seed: int = 0, log_every: int = 10) -> Dict[str, Any]:
-    """``engine`` is an Engine spec string (``"coo+serial"``, ...) selecting
-    the aggregation format/schedule for the 'ours' dataflow — validated
-    against the registry up front so a typo dies before the first batch.
-    This single-device trainer jits over the sampled COO layers, so only
-    trace-capable formats work here; layout-building formats (block/ell)
-    are rejected up front — they run through the distributed
-    ``Engine.build(mesh)`` path instead."""
+    """Compatible wrapper over the engine-native Trainer.
+
+    ``engine`` is an Engine spec string (``"coo+serial"``, ... — default
+    the serial COO oracle) selecting the aggregation format/schedule for
+    the 'ours' dataflow; EVERY registered spec trains end-to-end now,
+    including the layout-building ``block``/``ell`` formats (their
+    per-batch layouts build on the input-pipeline host thread, outside any
+    trace).  ``n_cores`` > 1 distributes over that many simulated/real
+    devices.  The reference arms (``dataflow="naive"``, ``model="sage"``)
+    keep the legacy single-device jitted loop.
+
+    Returns the legacy dict: ``params``, ``loss_history`` (this
+    invocation's steps), ``orders`` (the §4.4 sequence-estimator report),
+    ``wall_s``.
+    """
     if engine is not None:
+        from repro.engine import EngineConfig
+        EngineConfig.from_spec(engine)   # validate early, listing options
+    if dataflow == "naive" or model == "sage":
+        return _train_gcn_reference(
+            dataset, model=model, dataflow=dataflow, engine=engine,
+            scale=scale,
+            batch_size=batch_size, steps=steps, lr=lr, hidden=hidden,
+            feat_dim=feat_dim, ckpt_dir=ckpt_dir, resume=resume, seed=seed,
+            log_every=log_every)
+
+    from repro.launch.trainer import Trainer
+
+    ds = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
+    cfg = gcn_config(dataset, model, dataflow)
+    t0 = time.time()
+    tr = Trainer(engine or "coo+serial", ds, n_cores=n_cores,
+                 hidden=hidden or HIDDEN, batch_size=batch_size,
+                 fanouts=FANOUTS, lr=lr, seed=seed,
+                 input_pipeline=input_pipeline, ckpt_dir=ckpt_dir,
+                 ckpt_every=50, log_every=log_every)
+    orders = _estimator_orders(ds, tr.sampler, cfg, batch_size, seed,
+                               feat_dim=ds.features.shape[1],
+                               hidden=hidden or HIDDEN)
+    if resume:
+        tr.resume()
+    try:
+        history = tr.train_steps(max(steps - tr.global_step, 0))
+    finally:
+        tr.close()
+    return {"params": tr.params, "loss_history": history,
+            "orders": orders, "wall_s": time.time() - t0}
+
+
+def _estimator_orders(ds, sampler, cfg, batch_size: int, seed: int, *,
+                      feat_dim: int, hidden: int):
+    """Sequence estimator report (paper §4.4): one probe batch gives the
+    per-layer shapes, the estimator picks CoAg/AgCo per layer.  The engine
+    forward always runs CoAg; the report is kept for the legacy
+    ``train_gcn`` contract (and the naive arm, which does obey it)."""
+    mb0, _, _ = next(GraphBatchPipeline(ds, sampler, batch_size, seed=seed))
+    shapes = [LayerShape(b=batch_size, n=l.n_dst, nbar=l.n_src,
+                         d=feat_dim if i == len(mb0.layers) - 1 else hidden,
+                         h=cfg.n_classes if i == 0 else hidden,
+                         e=l.nnz, c=cfg.n_classes)
+              for i, l in enumerate(mb0.layers)]
+    return pick_orders(cfg, shapes)
+
+
+def _train_gcn_reference(dataset: str, *, model: str, dataflow: str,
+                         scale: float, batch_size: int, steps: int,
+                         lr: float, hidden: Optional[int],
+                         feat_dim: Optional[int], ckpt_dir: Optional[str],
+                         resume: bool, seed: int, log_every: int,
+                         engine: Optional[str] = None) -> Dict[str, Any]:
+    """The legacy single-device loop — kept as the reference arm for the
+    naive (Table-1 baseline) dataflow and the SAGE root-path model, which
+    the engine train step does not implement.  Jits ``gcn_loss`` over the
+    sampled COO layers with momentum SGD and the estimator's orders.
+    ``engine`` selects the 'ours' layers' spec (sage model); this loop
+    traces the sampled graphs, so layout-building formats are rejected up
+    front, exactly like the pre-Trainer trainer did."""
+    if engine is not None and dataflow == "ours":
         from repro.engine import EngineConfig, get_format
-        cfg_spec = EngineConfig.from_spec(engine)  # validate, list options
+        cfg_spec = EngineConfig.from_spec(engine)
         if not get_format(cfg_spec.format).traceable:
             raise ValueError(
-                f"engine spec {engine!r}: format {cfg_spec.format!r} builds "
-                "its layout host-side and cannot be jitted over sampled "
-                "graphs in this single-device trainer — use the "
-                "distributed path (repro.engine.Engine(spec).build(mesh)) "
-                'or a traceable format such as "coo+serial"')
+                f"engine spec {engine!r}: format {cfg_spec.format!r} "
+                "builds its layout host-side and cannot be jitted over "
+                "sampled graphs in this reference loop — the engine-native "
+                "Trainer path (model='gcn', dataflow='ours') supports it, "
+                'or use a traceable format such as "coo+serial"')
     ds = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
     cfg = gcn_config(dataset, model, dataflow)
     if engine:
@@ -81,18 +160,8 @@ def train_gcn(dataset: str = "flickr", *, model: str = "gcn",
         start_step = extra["step"]
 
     # sequence estimator: one order decision per run (paper §4.4)
-    avg_deg = ds.graph.n_edges / ds.graph.n_nodes
-    shapes = [LayerShape(b=batch_size, n=batch_size,
-                         nbar=batch_size * (FANOUTS[0] + 1),
-                         d=cfg.feat_dim, h=cfg.hidden, e=0, c=cfg.n_classes)]
-    mb0, _, _ = next(GraphBatchPipeline(ds, sampler, batch_size, seed=seed))
-    shapes = [LayerShape(b=batch_size, n=l.n_dst, nbar=l.n_src,
-                         d=cfg.feat_dim if i == len(mb0.layers) - 1
-                         else cfg.hidden,
-                         h=cfg.n_classes if i == 0 else cfg.hidden,
-                         e=l.nnz, c=cfg.n_classes)
-              for i, l in enumerate(mb0.layers)]
-    orders = pick_orders(cfg, shapes)
+    orders = _estimator_orders(ds, sampler, cfg, batch_size, seed,
+                               feat_dim=cfg.feat_dim, hidden=cfg.hidden)
 
     @jax.jit
     def step_fn(params, opt_state, layers, x, labels):
@@ -189,11 +258,18 @@ def main() -> None:
     g.add_argument("--dataflow", default="ours", choices=["ours", "naive"])
     g.add_argument("--engine", default=None,
                    help="Engine spec, e.g. coo+serial (default) — see "
-                        "repro.engine.supported_specs()")
+                        "repro.engine.supported_specs(); every registered "
+                        "spec trains end-to-end")
+    g.add_argument("--n-cores", type=int, default=1,
+                   help="hypercube size (needs that many jax devices)")
+    g.add_argument("--input-pipeline", default="prefetch",
+                   choices=["prefetch", "sync"])
     g.add_argument("--scale", type=float, default=0.01)
     g.add_argument("--batch-size", type=int, default=64)
     g.add_argument("--steps", type=int, default=100)
     g.add_argument("--lr", type=float, default=0.05)
+    g.add_argument("--hidden", type=int, default=None)
+    g.add_argument("--feat-dim", type=int, default=None)
     g.add_argument("--ckpt-dir", default=None)
     g.add_argument("--resume", action="store_true")
     l = sub.add_parser("lm")
@@ -209,9 +285,11 @@ def main() -> None:
     if args.cmd == "gcn":
         out = train_gcn(args.dataset, model=args.model,
                         dataflow=args.dataflow, engine=args.engine,
-                        scale=args.scale,
+                        scale=args.scale, n_cores=args.n_cores,
+                        input_pipeline=args.input_pipeline,
                         batch_size=args.batch_size, steps=args.steps,
-                        lr=args.lr, ckpt_dir=args.ckpt_dir,
+                        lr=args.lr, hidden=args.hidden,
+                        feat_dim=args.feat_dim, ckpt_dir=args.ckpt_dir,
                         resume=args.resume)
         print(f"final loss {out['loss_history'][-1]:.4f} "
               f"({out['wall_s']:.1f}s, orders={out['orders']})")

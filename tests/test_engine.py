@@ -313,13 +313,21 @@ def test_non_traceable_format_rejected_under_jit(rng):
     assert y.shape == (coo.n_dst, 4)
 
 
-def test_train_gcn_rejects_layout_building_engine_specs():
-    """The single-device trainer jits over sampled graphs — a block/ell
-    spec must die at validation time, before any data loads."""
+def test_train_gcn_trains_layout_building_engine_specs():
+    """train_gcn used to hard-reject block/ell (their layouts can't build
+    under jit); the Trainer's host-side input pipeline builds them per
+    batch OUTSIDE any trace, so every registered spec trains end-to-end —
+    and matches the coo+serial oracle trajectory.  Unknown specs still die
+    at validation time, before any data loads."""
     from repro.launch.train import train_gcn
 
-    with pytest.raises(ValueError, match="host-side"):
-        train_gcn("flickr", engine="ell+pipelined", steps=1)
+    ref = train_gcn("flickr", engine="coo+serial", steps=3, scale=0.005,
+                    batch_size=16, feat_dim=16, hidden=16, log_every=0)
+    out = train_gcn("flickr", engine="ell+pipelined", steps=3, scale=0.005,
+                    batch_size=16, feat_dim=16, hidden=16, log_every=0)
+    assert len(out["loss_history"]) == 3
+    np.testing.assert_allclose(out["loss_history"], ref["loss_history"],
+                               rtol=0, atol=1e-5)
     with pytest.raises(ValueError, match="registered formats"):
         train_gcn("flickr", engine="csr+serial", steps=1)
 
