@@ -34,6 +34,10 @@ TRACKED: Dict[str, str] = {
     # ratio of two same-host, same-run stall times, so common-mode load
     # cancels like the paired speedups above
     "input_pipeline.stall_reduction": "higher",
+    # the paper's NoC vs the dense all-pairs crossbar reference on the
+    # aggregation hot path (paired median — load-robust); the topology
+    # smoke gates it > 1, this tracks that it doesn't erode
+    "topology.hypercube_vs_allpairs_speedup": "higher",
 }
 
 

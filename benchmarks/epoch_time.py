@@ -26,6 +26,16 @@ Trainer's per-step host-stall time under a synchronous vs a prefetching
 sampling + per-batch layout build off the step critical path; results land
 in ``BENCH_input_pipeline.json`` and, via ``run --smoke``, in
 ``BENCH_smoke.json`` under ``input_pipeline``.
+
+``--topologies`` sweeps every registered interconnect topology (hypercube,
+allpairs, ring, torus2d, plus anything registered since) over ONE
+bit-matching synthetic stream: same graph, same batch, same seeds, only
+the exchange wires differ.  Per topology it records the analytic exchange
+plan (steps, bytes/core — ``Topology.plan``), the measured train-step
+time, and the paired-median aggregate-op speedup vs the dense ``allpairs``
+reference; results land in ``BENCH_topology.json``.  ``run --smoke`` gates
+``hypercube_vs_allpairs_speedup > 1`` at 4 cores — the structured NoC must
+beat the dense crossbar reference, or the headline topology claim is dead.
 """
 from __future__ import annotations
 
@@ -405,6 +415,202 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
 
 
 # ---------------------------------------------------------------------------
+# --topologies: every registered interconnect on one bit-matching stream.
+# ---------------------------------------------------------------------------
+def measured_topologies(n_cores: int = 4, base_spec: str = "ell+pipelined",
+                        batch: int = 256, mid: int = 512,
+                        frontier: int = 1024, feat: int = 128,
+                        hidden: int = 128, deg: int = 8, n_steps: int = 3,
+                        n_trials: int = 12, seed: int = 0) -> Dict:
+    """Train-step + aggregate-op time per registered topology, one stream.
+
+    Every topology consumes the SAME synthetic layers, features, labels and
+    params (the bit-matching stream): only the exchange wires differ, so
+    loss gaps measure reduction-order roundoff (must stay ≤1e-5) and time
+    gaps measure the interconnect.  The dense ``allpairs`` crossbar is the
+    baseline of every paired ratio — the structured topologies exist to
+    beat it.  Alongside the measurements, each topology's analytic exchange
+    plan (steps, bytes/core, max single-step message) is recorded from
+    ``Topology.plan`` so the cost table never drifts from the code.
+    """
+    from repro.distributed.gcn_train import init_params
+    from repro.engine import Engine, EngineConfig, available_topologies
+    from repro.engine.registry import get_topology
+
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    base = EngineConfig.from_spec(base_spec)
+    topologies = available_topologies()
+    mesh = jax.make_mesh((n_cores,), ("model",))
+    layers = _synthetic_layers(batch, mid, frontier, deg, seed)
+    out: Dict = {"n_cores": n_cores, "base_spec": f"{base.format}+"
+                 f"{base.schedule}", "batch": batch, "mid": mid,
+                 "frontier": frontier, "feat": feat, "hidden": hidden,
+                 "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
+                 "topologies": topologies}
+    runs = {}
+    for topo in topologies:
+        plan = get_topology(topo).plan(mid, feat, n_cores)
+        out[f"exchange_steps_{topo}"] = plan.steps
+        out[f"exchange_bytes_per_core_{topo}"] = plan.bytes_per_core
+        out[f"max_step_rows_{topo}"] = plan.max_step_rows
+        bundle = Engine(EngineConfig(format=base.format,
+                                     schedule=base.schedule,
+                                     topology=topo, lr=0.05)).build(mesh)
+        b = _synthetic_sharded_batch(bundle, batch, frontier, feat,
+                                     layers=layers, seed=seed)
+        params = init_params(jax.random.PRNGKey(seed),
+                             [(feat, hidden), (hidden, 16)])
+        step = bundle.train_step_fn(b["dims"])
+        params, loss = step(params, b)        # compile
+        # loss_match compares THIS loss: every arm evaluates it at the
+        # identical initial params on the identical batch, so the gap is
+        # forward-only reduction-order roundoff — an optimizer-amplified
+        # later-step loss would make the 1e-5 gate flap on unlucky seeds
+        first_loss = float(loss)
+        params, loss = step(params, b)        # warmup
+        jax.block_until_ready(loss)
+        runs[topo] = {"step": step, "batch": b, "params": params,
+                      "loss": first_loss, "times": []}
+    for _ in range(n_trials):
+        for arm in runs.values():       # back-to-back: load is common-mode
+            t0 = time.perf_counter()
+            params, loss = arm["params"], None
+            for _ in range(n_steps):
+                params, loss = arm["step"](params, arm["batch"])
+            jax.block_until_ready(loss)
+            arm["times"].append((time.perf_counter() - t0) / n_steps)
+    ref_loss = runs["hypercube"]["loss"]
+    out["loss_match"] = True
+    for topo, arm in runs.items():
+        out[f"s_per_step_{topo}"] = min(arm["times"])
+        out[f"loss_{topo}"] = arm["loss"]
+        if abs(arm["loss"] - ref_loss) > 1e-5:
+            out["loss_match"] = False
+        if topo != "allpairs":
+            ratios = sorted(a / t for a, t in
+                            zip(runs["allpairs"]["times"], arm["times"]))
+            out[f"step_speedup_vs_allpairs_{topo}"] = \
+                ratios[len(ratios) // 2]                  # paired median
+    out.update(_measured_topology_aggregate_op(
+        n_cores, mid, frontier, feat, deg, n_trials * n_steps, seed,
+        base=base, topologies=topologies))
+    # the headline ratio the smoke gates and compare.py tracks: the paper's
+    # NoC vs the dense crossbar reference, on the aggregation hot path
+    out["hypercube_vs_allpairs_speedup"] = \
+        out["agg_fwdbwd_speedup_vs_allpairs_hypercube"]
+    return out
+
+
+def _measured_topology_aggregate_op(n_cores: int, n_dst: int, n_src: int,
+                                    d: int, deg: int, n_pairs: int,
+                                    seed: int, base, topologies) -> Dict:
+    """The exchange in isolation: aggregate fwd and fwd+bwd per topology,
+    paired against the allpairs reference call-by-call (same methodology
+    as :func:`_measured_overlap_aggregate_op` — common-mode host load
+    cancels in the per-pair ratio)."""
+    from repro.distributed.sharding import leading_axis_put
+    from repro.engine import Engine, EngineConfig
+    from repro.graph.coo import from_edges
+
+    rng = np.random.default_rng(seed)
+    e = n_dst * deg
+    coo = from_edges(rng.integers(0, n_dst, e), rng.integers(0, n_src, e),
+                     np.abs(rng.standard_normal(e)).astype(np.float32) + 0.1,
+                     n_dst, n_src)
+    mesh = jax.make_mesh((n_cores,), ("model",))
+    x = leading_axis_put(mesh,
+                         rng.standard_normal((n_src, d)).astype(np.float32))
+
+    def arms(topo):
+        fn = Engine(EngineConfig(format=base.format, schedule=base.schedule,
+                                 topology=topo)) \
+            .build(mesh, graph=coo).aggregator()
+        gf = jax.jit(jax.grad(lambda xx, fn=fn: jnp.sum(fn(xx) ** 2)))
+        return fn, gf
+
+    ref_fwd, ref_bwd = arms("allpairs")
+
+    def paired(f1, f2):
+        jax.block_until_ready(f1(x))
+        jax.block_until_ready(f2(x))
+        rs = []
+        for _ in range(n_pairs):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f1(x))
+            t1 = time.perf_counter()
+            jax.block_until_ready(f2(x))
+            rs.append((t1 - t0) / (time.perf_counter() - t1))
+        rs.sort()
+        return rs[len(rs) // 2]
+
+    out: Dict = {}
+    for topo in topologies:
+        if topo == "allpairs":
+            continue
+        fwd, bwd = arms(topo)
+        out[f"agg_fwd_speedup_vs_allpairs_{topo}"] = paired(ref_fwd, fwd)
+        out[f"agg_fwdbwd_speedup_vs_allpairs_{topo}"] = paired(ref_bwd, bwd)
+    return out
+
+
+def run_topology_arm(n_cores: int = 4, *, smoke: bool = False,
+                     base_spec: str = "ell+pipelined",
+                     out_path: str = "BENCH_topology.json") -> Dict:
+    """Re-exec the topology sweep under a forced multi-device backend
+    (XLA_FLAGS must precede the jax import) and write ``out_path``."""
+    from repro.engine import EngineConfig
+
+    base = EngineConfig.from_spec(base_spec)      # fail fast on a bad spec
+    kwargs: Dict = {"n_cores": n_cores,
+                    "base_spec": f"{base.format}+{base.schedule}"}
+    if smoke:
+        kwargs.update(batch=128, mid=256, frontier=512, feat=64, hidden=64,
+                      deg=8, n_steps=3)
+    child = (
+        "import json, sys; sys.path.insert(0, '.');"
+        "from benchmarks.epoch_time import measured_topologies;"
+        f"print(json.dumps(measured_topologies(**{kwargs!r})))"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_cores} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"topology arm failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"## topology sweep ({n_cores} simulated cores, "
+          f"{rec['base_spec']}+<topology>): one bit-matching stream")
+    print("topology,steps,bytes/core,max_step_rows,s_per_step")
+    for topo in rec["topologies"]:
+        print(f"{topo},{rec[f'exchange_steps_{topo}']},"
+              f"{rec[f'exchange_bytes_per_core_{topo}']},"
+              f"{rec[f'max_step_rows_{topo}']},"
+              f"{rec[f's_per_step_{topo}']:.4f}")
+    for topo in rec["topologies"]:
+        if topo == "allpairs":
+            continue
+        print(f"# {topo} vs allpairs: train-step "
+              f"{rec[f'step_speedup_vs_allpairs_{topo}']:.3f}x  agg fwd "
+              f"{rec[f'agg_fwd_speedup_vs_allpairs_{topo}']:.3f}x  fwd+bwd "
+              f"{rec[f'agg_fwdbwd_speedup_vs_allpairs_{topo}']:.3f}x  "
+              "(paired median)")
+    print(f"# loss_match(<=1e-5 across topologies)={rec['loss_match']}  "
+          f"hypercube_vs_allpairs={rec['hypercube_vs_allpairs_speedup']:.3f}x")
+    print(f"# (wrote {out_path})")
+    return rec
+
+
+# ---------------------------------------------------------------------------
 # --input-pipeline: host-stall per step, sync vs prefetch (the Trainer's
 # async input pipeline), same stream, same spec — the overlap win recorded.
 # ---------------------------------------------------------------------------
@@ -526,12 +732,21 @@ def main() -> None:
                     help="comma-separated engine specs to measure against "
                          "the coo+serial oracle (replaces the old "
                          "--ell/--no-ell flag pair)")
+    ap.add_argument("--topologies", action="store_true",
+                    help="sweep every registered interconnect topology on "
+                         "one bit-matching stream (exchange steps + bytes "
+                         "+ measured speedups vs the allpairs reference; "
+                         "writes BENCH_topology.json)")
     args = ap.parse_args()
 
     ran = False
     if args.overlap or args.smoke:
         arms = tuple(s for s in args.arms.split(",") if s)
         run_overlap_arm(args.cores, smoke=args.smoke, arms=arms)
+        ran = True
+    if args.topologies:
+        run_topology_arm(min(args.cores, 4) if args.smoke else args.cores,
+                         smoke=args.smoke, base_spec=args.spec)
         ran = True
     if args.input_pipeline is not None:
         modes = ("sync", "prefetch") if args.input_pipeline == "both" \

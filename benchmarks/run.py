@@ -5,12 +5,14 @@
 
 ``--smoke`` is the CI arm: it autotunes the ELL engine (winner persisted to
 ``BENCH_autotune.json``), exercises the overlap + pre-reduced-ELL
-aggregation arms at toy sizes (4 simulated cores), sanity-runs the
-block-layout and ELL SpMM kernels against their oracle, diffs the fresh
-record against the previous ``BENCH_smoke.json`` (warn-only), and writes
-``BENCH_smoke.json`` + ``BENCH_overlap.json`` for the workflow to upload
-as artifacts.  The smoke FAILS if the ELL arm's aggregation speedups drop
-to ≤1.0 — no regression arm ships.
+aggregation arms at toy sizes (4 simulated cores), sweeps every registered
+interconnect topology on one bit-matching stream (``BENCH_topology.json``),
+sanity-runs the block-layout and ELL SpMM kernels against their oracle,
+diffs the fresh record against the previous ``BENCH_smoke.json``
+(warn-only), and writes ``BENCH_smoke.json`` + ``BENCH_overlap.json`` for
+the workflow to upload as artifacts.  The smoke FAILS if the ELL arm's
+aggregation speedups drop to ≤1.0 or the hypercube NoC stops beating the
+dense all-pairs reference — no regression arm ships.
 """
 from __future__ import annotations
 
@@ -44,8 +46,13 @@ def smoke() -> int:
 
     print(f"\n{'=' * 72}\nengine arms — coo+serial oracle vs "
           f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
-    from benchmarks.epoch_time import run_input_pipeline_arm, run_overlap_arm
+    from benchmarks.epoch_time import (run_input_pipeline_arm,
+                                       run_overlap_arm, run_topology_arm)
     rec["overlap"] = run_overlap_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\ntopology sweep — every registered interconnect "
+          f"vs the allpairs reference (toy)\n{'=' * 72}")
+    rec["topology"] = run_topology_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\ninput pipeline — Trainer host-stall/step, "
           f"sync vs prefetch (toy)\n{'=' * 72}")
@@ -99,6 +106,7 @@ def smoke() -> int:
         print_report(rows, regressions, 0.10)   # warn-only in CI for now
     ov = rec["overlap"]
     ip = rec["input_pipeline"]
+    tp = rec["topology"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -108,6 +116,12 @@ def smoke() -> int:
           # must beat the serial schedule on its own hot path
           and ov["agg_fwd_speedup_ell"] > 1.0
           and ov["agg_fwdbwd_speedup_ell"] > 1.0
+          # the topology gate (4 cores): the paper's hypercube NoC must
+          # beat the dense all-pairs crossbar reference on the aggregation
+          # hot path, and every topology's loss must stay within 1e-5 on
+          # the shared bit-matching stream
+          and tp["hypercube_vs_allpairs_speedup"] >= 1.0
+          and tp["loss_match"]
           # and the async input pipeline must actually overlap: prefetch
           # STRICTLY reduces per-step host stall vs the sync pipeline on
           # an identical (bit-matching) batch stream
@@ -133,6 +147,8 @@ def main() -> None:
          "dataflow_table1"),
         ("Table 2 — epoch time, ours vs naive dataflow", "epoch_time"),
         ("Overlap — serial vs pipelined aggregation", "epoch_time:overlap"),
+        ("Topology — registered interconnects vs the allpairs reference",
+         "epoch_time:topologies"),
         ("Fig. 1 — access locality / NUMA-vs-UMA bytes", "hbm_access"),
         ("Fig. 10/11 — compute:comm ratio + utilization", "ctc_ratio"),
         ("§Roofline — dry-run three-term table", "roofline"),
@@ -149,6 +165,8 @@ def main() -> None:
                 m = __import__(f"benchmarks.{mod}", fromlist=["main"])
                 if variant == "overlap":
                     m.run_overlap_arm(8, smoke=args.fast)
+                elif variant == "topologies":
+                    m.run_topology_arm(8, smoke=args.fast)
                 else:
                     m.main()
                 print(f"[{mod}: {time.time() - t0:.1f}s]")

@@ -14,19 +14,22 @@ Aggregation then runs in two stages inside ``shard_map``:
      wire will carry one partial row per (block, aggregate-slot), never raw
      neighbor rows: this is the paper's N ≤ nnz compression.
 
-  2. **Hypercube fold** (:func:`hypercube_reduce_scatter`): ``log₂P`` rounds
-     of pairwise ``ppermute`` along hypercube dimensions, high bit first.
-     Round *b* sends the half of the partial buffer owned by the other
-     half-cube and adds the received half — the dimension-ordered schedule of
-     :mod:`repro.core.schedule`, which Algorithm 1 degenerates to when every
-     wave is full (and which XLA can pipeline).  After the last round each
-     device holds exactly its own rows, fully reduced.
+  2. **Topology exchange** (:mod:`repro.topology`): the partial row-blocks
+     fold down to their owner cores over the engine's configured
+     interconnect — the ``log₂P`` dimension-ordered hypercube (the default
+     and the fp32 oracle schedule), a ring, a dense all-pairs reference, or
+     the paper's orthogonal 2-D torus.  The exchange loops that used to
+     live inline here are the registered :class:`~repro.topology.Topology`
+     objects' ``reduce_scatter``/``allgather``/``fold_pipelined`` plans;
+     :func:`hypercube_reduce_scatter` and friends remain as delegating
+     shims over :mod:`repro.topology.hypercube`.
 
 The backward pass is the paper's Table-1 redesign, distributed: a
-``custom_vjp`` runs the *mirror* schedule — all-gather the error rows
-(:func:`hypercube_allgather`, the transpose of reduce-scatter) and walk the
-SAME local edge table column-major (``Aᵀ`` without an ``Aᵀ``) — so no
-transposed feature matrix and no second edge table exist on any device.
+``custom_vjp`` runs the *mirror* schedule — all-gather the error rows over
+the SAME topology (the transpose of its reduce-scatter) and walk the SAME
+local edge table column-major (``Aᵀ`` without an ``Aᵀ``) — so no
+transposed feature matrix, no second edge table, and no transposed
+exchange schedule exist on any device, whatever the interconnect.
 
 A UMA/SMP baseline (:func:`uma_aggregate`) does what the paper argues
 against: all-gather raw features everywhere, aggregate redundantly, discard.
@@ -43,116 +46,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blockmsg import block_tiles
-from repro.core.schedule import feature_waves
 from repro.cotangents import zero_ct
-from repro.distributed.overlap import double_buffered_exchange
 from repro.graph.coo import COO
 from repro.graph.partition import block_partition
 
 
-# ---------------------------------------------------------------------------
-# Collective building blocks (inside shard_map, axis = the "core" axis).
-# ---------------------------------------------------------------------------
-def _dim_perm(n_cores: int, bit: int) -> list:
-    return [(i, i ^ (1 << bit)) for i in range(n_cores)]
+def _topo(name: str):
+    # lazy: aggregate ← engine ← topology all import each other at module
+    # level somewhere along the chain; at trace time everything is fully
+    # initialized and repro.topology.base owns the one lookup path
+    from repro.topology.base import _topo as lookup
+    return lookup(name)
 
 
+# ---------------------------------------------------------------------------
+# Hypercube collective shims — canonical implementations moved to
+# repro.topology.hypercube (the Topology registry owns the exchange plans);
+# these names stay for the callers/tests that predate the topology axis.
+# ---------------------------------------------------------------------------
 def hypercube_reduce_scatter(partial: jnp.ndarray, axis_name: str,
                              ndim: int) -> jnp.ndarray:
-    """Fold per-owner partials across the hypercube, high dimension first.
-
-    ``partial``: [P, t, ...] — row-blocks ordered by owner core id.  Returns
-    [t, ...]: this device's rows, fully reduced.  Because blocks are in
-    ascending core order and we process the top bit first, 'my half' is
-    always a contiguous slice — each round halves the buffer (the wire bytes
-    form the geometric series t·(1 − 1/P), same as a reduce-scatter).
-    """
-    idx = jax.lax.axis_index(axis_name)
-    n_cores = 1 << ndim
-    buf = partial
-    for b in reversed(range(ndim)):
-        half = buf.shape[0] // 2
-        low, high = buf[:half], buf[half:]
-        my_bit = (idx >> b) & 1
-        mine = jnp.where(my_bit == 0, low, high)
-        send = jnp.where(my_bit == 0, high, low)
-        recv = jax.lax.ppermute(send, axis_name, _dim_perm(n_cores, b))
-        buf = mine + recv
-    return buf[0]
+    """Delegates to :func:`repro.topology.hypercube.hypercube_reduce_scatter`."""
+    from repro.topology.hypercube import hypercube_reduce_scatter as f
+    return f(partial, axis_name, ndim)
 
 
 def hypercube_allgather(x: jnp.ndarray, axis_name: str, ndim: int
                         ) -> jnp.ndarray:
-    """Mirror schedule (transpose of the reduce-scatter): after ``ndim``
-    doubling rounds every device holds [P, t, ...] in core order."""
-    idx = jax.lax.axis_index(axis_name)
-    n_cores = 1 << ndim
-    buf = x[None]
-    for b in range(ndim):
-        other = jax.lax.ppermute(buf, axis_name, _dim_perm(n_cores, b))
-        my_bit = (idx >> b) & 1
-        lo = jnp.concatenate([buf, other], axis=0)
-        hi = jnp.concatenate([other, buf], axis=0)
-        buf = jnp.where(my_bit == 0, lo, hi)
-    return buf
+    """Delegates to :func:`repro.topology.hypercube.hypercube_allgather`."""
+    from repro.topology.hypercube import hypercube_allgather as f
+    return f(x, axis_name, ndim)
 
 
 def hypercube_reduce_scatter_pipelined(partial: jnp.ndarray, axis_name: str,
                                        ndim: int, n_chunks: int = 2
                                        ) -> jnp.ndarray:
-    """Double-buffered fold — bit-identical to the serial reduce-scatter.
-
-    The feature dimension is split into ``n_chunks`` waves
-    (:func:`repro.core.schedule.feature_waves`); within every round all
-    waves' ``ppermute`` sends are issued before any wave's local add
-    consumes a received half, so the wire transfer of wave *k+1* overlaps
-    the MAC work of wave *k* — the paper's ping-pong Block-Message buffers
-    (§4.2), expressed as dataflow for XLA's latency-hiding scheduler.
-    Per-element add order matches :func:`hypercube_reduce_scatter` exactly,
-    so fp32 results are bit-equal.
-    """
-    idx = jax.lax.axis_index(axis_name)
-    n_cores = 1 << ndim
-    waves = feature_waves(partial.shape[-1], n_chunks)
-    bufs = [jax.lax.slice_in_dim(partial, w.start, w.stop, axis=-1)
-            for w in waves]
-    for b in reversed(range(ndim)):
-        half = bufs[0].shape[0] // 2
-        my_bit = (idx >> b) & 1
-        perm = _dim_perm(n_cores, b)
-
-        def split(buf, my_bit=my_bit, half=half):
-            mine = jax.lax.dynamic_slice_in_dim(buf, my_bit * half, half, 0)
-            send = jax.lax.dynamic_slice_in_dim(buf, (1 - my_bit) * half,
-                                                half, 0)
-            return mine, send
-
-        bufs = double_buffered_exchange(
-            bufs, split,
-            lambda s, perm=perm: jax.lax.ppermute(s, axis_name, perm))
-    return jnp.concatenate([b[0] for b in bufs], axis=-1)
+    """Delegates to
+    :func:`repro.topology.hypercube.hypercube_reduce_scatter_pipelined`."""
+    from repro.topology.hypercube import (
+        hypercube_reduce_scatter_pipelined as f)
+    return f(partial, axis_name, ndim, n_chunks)
 
 
 def hypercube_allgather_pipelined(x: jnp.ndarray, axis_name: str, ndim: int,
                                   n_chunks: int = 2) -> jnp.ndarray:
-    """Mirror of the pipelined fold (the backward pass's gather): the same
-    feature waves, each wave one ``all_gather`` in core order.
-
-    All waves' collectives are issued independently before any result is
-    consumed, so wave *k*'s wire time hides under wave *k+1*'s — and each
-    wave lowers to XLA's native all-gather, which schedules the
-    dimension-ordered doubling itself instead of paying ``ndim`` rounds of
-    hand-rolled concatenate+select copies (the gather moves bytes only, so
-    the result is bit-identical to :func:`hypercube_allgather`).
-    """
-    del ndim  # the native collective derives the schedule from the mesh
-    waves = feature_waves(x.shape[-1], n_chunks)
-    if len(waves) == 1:
-        return jax.lax.all_gather(x, axis_name)
-    gathered = [jax.lax.all_gather(
-        jax.lax.slice_in_dim(x, w.start, w.stop, axis=-1), axis_name)
-        for w in waves]
-    return jnp.concatenate(gathered, axis=-1)
+    """Delegates to
+    :func:`repro.topology.hypercube.hypercube_allgather_pipelined`."""
+    from repro.topology.hypercube import hypercube_allgather_pipelined as f
+    return f(x, axis_name, ndim, n_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -226,25 +167,27 @@ def _local_partials(rows_g, cols_l, vals, x_local, n_dst):
     return jax.ops.segment_sum(gathered, rows_g, num_segments=n_dst)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def _hypercube_aggregate(axis_name: str, ndim: int, n_dst: int,
-                         rows_g, cols_l, vals, x_local):
+                         topology: str, rows_g, cols_l, vals, x_local):
     n_cores = 1 << ndim
     partial = _local_partials(rows_g, cols_l, vals, x_local, n_dst)
     partial = partial.reshape(n_cores, n_dst // n_cores, -1)
-    return hypercube_reduce_scatter(partial, axis_name, ndim)
+    return _topo(topology).reduce_scatter(partial, axis_name, n_cores)
 
 
-def _hyper_fwd(axis_name, ndim, n_dst, rows_g, cols_l, vals, x_local):
-    y = _hypercube_aggregate(axis_name, ndim, n_dst, rows_g, cols_l, vals,
-                             x_local)
+def _hyper_fwd(axis_name, ndim, n_dst, topology, rows_g, cols_l, vals,
+               x_local):
+    y = _hypercube_aggregate(axis_name, ndim, n_dst, topology, rows_g,
+                             cols_l, vals, x_local)
     return y, (rows_g, cols_l, vals, x_local)
 
 
-def _hyper_bwd(axis_name, ndim, n_dst, res, ct):
+def _hyper_bwd(axis_name, ndim, n_dst, topology, res, ct):
     rows_g, cols_l, vals, x_local = res
-    # mirror schedule: error rows of ALL cores (transpose of reduce-scatter)
-    e_full = hypercube_allgather(ct, axis_name, ndim)        # [P, dpc, d]
+    # mirror schedule: error rows of ALL cores over the SAME topology
+    # (the transpose of its reduce-scatter)
+    e_full = _topo(topology).allgather(ct, axis_name, 1 << ndim)
     e_full = e_full.reshape(n_dst, -1)
     # Aᵀ walk of the SAME local edge table (column-major = Graph Converter):
     # dx[c] += v · e[r]  — consumes global rows, produces local cols.
@@ -261,15 +204,19 @@ _hypercube_aggregate.defvjp(_hyper_fwd, _hyper_bwd)
 
 def hypercube_aggregate(axis_name: str, ndim: int, n_dst: int,
                         rows_g: jnp.ndarray, cols_l: jnp.ndarray,
-                        vals: jnp.ndarray, x_local: jnp.ndarray
-                        ) -> jnp.ndarray:
+                        vals: jnp.ndarray, x_local: jnp.ndarray,
+                        topology: str = "hypercube") -> jnp.ndarray:
     """Per-device body: ``y_local = (A @ x)_local`` via pre-reduce + fold.
 
     Call inside ``shard_map`` over ``axis_name``; edge arrays are this
     device's :class:`EdgeShards` slice, ``x_local`` its feature rows.
+    ``topology`` names the registered interconnect the partial rows fold
+    over (default: the paper's hypercube — the historical name of this
+    entry point); the backward all-gathers the error rows over the same
+    topology's mirror schedule.
     """
-    return _hypercube_aggregate(axis_name, ndim, n_dst, rows_g, cols_l,
-                                vals, x_local)
+    return _hypercube_aggregate(axis_name, ndim, n_dst, topology, rows_g,
+                                cols_l, vals, x_local)
 
 
 # ---------------------------------------------------------------------------
@@ -348,61 +295,17 @@ def _local_partials_blocked(rows_b, cols_b, vals_b, x_local, dpc: int):
     return out.reshape(n_blocks, dpc, -1)
 
 
-def _fold_pipelined(axis_name: str, ndim: int, n_chunks: int,
-                    partials_fn, x_local):
-    """Fused local SpMM + double-buffered fold, layout-agnostic.
-
-    ``partials_fn(x_chunk) -> [P, dpc, dc]`` is the local pre-reduction for
-    one feature wave — the Block-Message tile scatter or the pre-reduced
-    ELL gather; the fold around it is identical.  Per feature wave the SpMM
-    for the half-cube this device does NOT own is computed first and its
-    round-(ndim-1) ``ppermute`` issued immediately; the SpMM for the
-    still-owned half then runs while that first transfer is on the wire
-    (paper §4.3, Fig. 9 — message passing overlapped with MAC work).  The
-    remaining rounds use the double-buffered fold.
-    """
-    n_cores = 1 << ndim
-    if ndim == 0:
-        return partials_fn(x_local)[0]
-    idx = jax.lax.axis_index(axis_name)
-    waves = feature_waves(x_local.shape[-1], n_chunks)
-    b0 = ndim - 1                     # top bit: the first fold round
-    half = n_cores // 2
-    my_bit0 = (idx >> b0) & 1
-    perm0 = _dim_perm(n_cores, b0)
-    mines, recvs = [], []
-    for w in waves:
-        xc = jax.lax.slice_in_dim(x_local, w.start, w.stop, axis=-1)
-        # wave k's SpMM runs while wave k-1's send (issued below, consumed
-        # only after the loop) is on the wire — the ping-pong buffer
-        p = partials_fn(xc)
-        send = jax.lax.dynamic_slice_in_dim(p, (1 - my_bit0) * half,
-                                            half, 0)
-        recvs.append(jax.lax.ppermute(send, axis_name, perm0))
-        mines.append(jax.lax.dynamic_slice_in_dim(p, my_bit0 * half,
-                                                  half, 0))
-    bufs = [m + r for m, r in zip(mines, recvs)]
-    for b in reversed(range(ndim - 1)):
-        cur_half = bufs[0].shape[0] // 2
-        my_bit = (idx >> b) & 1
-        perm = _dim_perm(n_cores, b)
-
-        def split(buf, my_bit=my_bit, cur_half=cur_half):
-            mine = jax.lax.dynamic_slice_in_dim(buf, my_bit * cur_half,
-                                                cur_half, 0)
-            send = jax.lax.dynamic_slice_in_dim(
-                buf, (1 - my_bit) * cur_half, cur_half, 0)
-            return mine, send
-
-        bufs = double_buffered_exchange(
-            bufs, split,
-            lambda s, perm=perm: jax.lax.ppermute(s, axis_name, perm))
-    return jnp.concatenate([b[0] for b in bufs], axis=-1)   # [dpc, d]
-
-
 def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
-                        n_chunks: int, rows_b, cols_b, vals_b, x_local):
-    """Block-tile partials through the shared pipelined fold."""
+                        n_chunks: int, topology: str, rows_b, cols_b,
+                        vals_b, x_local):
+    """Block-tile partials through the topology's fused pipelined fold.
+
+    ``Topology.fold_pipelined`` owns the exchange: the hypercube runs the
+    fused SpMM + ping-pong fold (§4.3, Fig. 9 — the first round's send is
+    on the wire while the still-owned half's SpMM computes); other
+    topologies default to per-wave reduce-scatters whose sends are
+    independent dataflow.
+    """
     n_cores = 1 << ndim
     dpc = n_dst // n_cores
     if rows_b.shape[0] != n_cores:
@@ -411,33 +314,35 @@ def _pipelined_fwd_impl(axis_name: str, ndim: int, n_dst: int,
         raise ValueError(
             f"tile count {rows_b.shape[0]} != 2^ndim = {n_cores}; edge "
             "arrays must come from shard_edges_blocked on the same mesh")
-    return _fold_pipelined(
-        axis_name, ndim, n_chunks,
+    return _topo(topology).fold_pipelined(
+        axis_name, n_cores, n_chunks,
         lambda xc: _local_partials_blocked(rows_b, cols_b, vals_b, xc, dpc),
         x_local)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def _hypercube_aggregate_pipelined(axis_name: str, ndim: int, n_dst: int,
-                                   n_chunks: int, rows_b, cols_b, vals_b,
-                                   x_local):
-    return _pipelined_fwd_impl(axis_name, ndim, n_dst, n_chunks,
+                                   n_chunks: int, topology: str, rows_b,
+                                   cols_b, vals_b, x_local):
+    return _pipelined_fwd_impl(axis_name, ndim, n_dst, n_chunks, topology,
                                rows_b, cols_b, vals_b, x_local)
 
 
-def _pipe_fwd(axis_name, ndim, n_dst, n_chunks, rows_b, cols_b, vals_b,
-              x_local):
+def _pipe_fwd(axis_name, ndim, n_dst, n_chunks, topology, rows_b, cols_b,
+              vals_b, x_local):
     y = _hypercube_aggregate_pipelined(axis_name, ndim, n_dst, n_chunks,
-                                       rows_b, cols_b, vals_b, x_local)
+                                       topology, rows_b, cols_b, vals_b,
+                                       x_local)
     return y, (rows_b, cols_b, vals_b, x_local)
 
 
-def _pipe_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
+def _pipe_bwd(axis_name, ndim, n_dst, n_chunks, topology, res, ct):
     from repro.core.gcn import _spmm_t_blocked
 
     rows_b, cols_b, vals_b, x_local = res
-    # mirror schedule, same waves: all-gather the error rows double-buffered
-    e_full = hypercube_allgather_pipelined(ct, axis_name, ndim, n_chunks)
+    # mirror schedule, same topology, same waves: all-gather the error rows
+    e_full = _topo(topology).allgather_pipelined(ct, axis_name, 1 << ndim,
+                                                 n_chunks)
     # Aᵀ walk of the SAME block tiles, column-major: tile b's error rows are
     # the contiguous slab e_full[b] — one shared implementation with the
     # single-device blocked layer.
@@ -463,22 +368,25 @@ def default_n_chunks() -> int:
 def hypercube_aggregate_pipelined(axis_name: str, ndim: int, n_dst: int,
                                   rows_b: jnp.ndarray, cols_b: jnp.ndarray,
                                   vals_b: jnp.ndarray, x_local: jnp.ndarray,
-                                  n_chunks: Optional[int] = None
+                                  n_chunks: Optional[int] = None,
+                                  topology: str = "hypercube"
                                   ) -> jnp.ndarray:
     """Per-device body: ``y_local = (A @ x)_local`` with the double-buffered
-    schedule — block-tile SpMM overlapped with the hypercube fold.
+    schedule — block-tile SpMM overlapped with the topology's fold.
 
     Call inside ``shard_map`` over ``axis_name``; edge arrays are this
     device's :class:`BlockEdgeShards` slice ([B, eb] tiles), ``x_local`` its
-    feature rows.  fp32 results (and the custom-vjp backward) are bit-equal
-    to :func:`hypercube_aggregate` for ANY wave count; only the issue order
-    differs.  ``n_chunks=None`` picks :func:`default_n_chunks`.
+    feature rows.  On the default hypercube topology, fp32 results (and the
+    custom-vjp backward) are bit-equal to :func:`hypercube_aggregate` for
+    ANY wave count — only the issue order differs; other topologies reorder
+    the partial-row additions and match to fp32 roundoff (≤1e-5).
+    ``n_chunks=None`` picks :func:`default_n_chunks`.
     """
     if n_chunks is None:
         n_chunks = default_n_chunks()
     return _hypercube_aggregate_pipelined(axis_name, ndim, n_dst,
-                                          int(n_chunks), rows_b, cols_b,
-                                          vals_b, x_local)
+                                          int(n_chunks), topology, rows_b,
+                                          cols_b, vals_b, x_local)
 
 
 # ---------------------------------------------------------------------------
@@ -578,31 +486,32 @@ def shard_edges_ell(coo: COO, n_cores: int, caps=None) -> EllEdgeShards:
         (coo.rows, coo.cols, coo.vals), _build)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def _hypercube_aggregate_ell(axis_name: str, ndim: int, n_dst: int,
-                             n_chunks: int, tables, x_local):
+                             n_chunks: int, topology: str, tables, x_local):
     from repro.kernels.ops import ell_apply
 
     n_cores = 1 << ndim
     dpc = n_dst // n_cores
-    return _fold_pipelined(
-        axis_name, ndim, n_chunks,
+    return _topo(topology).fold_pipelined(
+        axis_name, n_cores, n_chunks,
         lambda xc: ell_apply(tables, xc).reshape(n_cores, dpc, -1),
         x_local)
 
 
-def _ell_fwd(axis_name, ndim, n_dst, n_chunks, tables, x_local):
-    y = _hypercube_aggregate_ell(axis_name, ndim, n_dst, n_chunks, tables,
-                                 x_local)
+def _ell_fwd(axis_name, ndim, n_dst, n_chunks, topology, tables, x_local):
+    y = _hypercube_aggregate_ell(axis_name, ndim, n_dst, n_chunks, topology,
+                                 tables, x_local)
     return y, tables        # aggregation is linear in x: plan-only residual
 
 
-def _ell_bwd(axis_name, ndim, n_dst, n_chunks, res, ct):
+def _ell_bwd(axis_name, ndim, n_dst, n_chunks, topology, res, ct):
     from repro.kernels.ops import ell_apply
 
     tables = res
-    # mirror schedule, same waves: all-gather the error rows double-buffered
-    e_full = hypercube_allgather_pipelined(ct, axis_name, ndim, n_chunks)
+    # mirror schedule, same topology, same waves: all-gather the error rows
+    e_full = _topo(topology).allgather_pipelined(ct, axis_name, 1 << ndim,
+                                                 n_chunks)
     # then the column-major ELL walk of the SAME plan — scatter-free Aᵀ
     dx_local = ell_apply(tables, e_full.reshape(n_dst, -1), transpose=True)
     return (zero_ct(tables), dx_local)
@@ -613,7 +522,8 @@ _hypercube_aggregate_ell.defvjp(_ell_fwd, _ell_bwd)
 
 def hypercube_aggregate_ell(axis_name: str, ndim: int, n_dst: int,
                             tables: Dict, x_local: jnp.ndarray,
-                            n_chunks: Optional[int] = None) -> jnp.ndarray:
+                            n_chunks: Optional[int] = None,
+                            topology: str = "hypercube") -> jnp.ndarray:
     """Per-device body: ``y_local = (A @ x)_local`` through the pre-reduced
     ELL engine + the double-buffered hypercube fold.
 
@@ -630,7 +540,7 @@ def hypercube_aggregate_ell(axis_name: str, ndim: int, n_dst: int,
     if n_chunks is None:
         n_chunks = default_n_chunks()
     return _hypercube_aggregate_ell(axis_name, ndim, n_dst, int(n_chunks),
-                                    tables, x_local)
+                                    topology, tables, x_local)
 
 
 def shard_edges_by_dst(coo: COO, n_cores: int,

@@ -62,6 +62,28 @@ def double_buffered_exchange(chunks: Sequence[jnp.ndarray],
     return [m + r for m, r in zip(mines, recvs)]
 
 
+def double_buffered_rounds(chunks: Sequence[jnp.ndarray],
+                           round_fns: Sequence[Callable]
+                           ) -> List[jnp.ndarray]:
+    """A full pipelined exchange: one double-buffered round per topology
+    step.
+
+    The round count is the TOPOLOGY's step count
+    (:meth:`repro.topology.Topology.steps`) — ``log₂P`` rounds for the
+    hypercube fold, ``P−1`` for a ring — not a hardcoded hypercube loop.
+    Each entry of ``round_fns`` is called with the current chunks and
+    returns that round's ``(split_fn, permute_fn)`` pair (the buffer halves
+    shrink as a fold progresses, so the split is derived per round); the
+    round itself runs through :func:`double_buffered_exchange`, keeping the
+    all-sends-before-any-combine ping-pong structure — and the per-element
+    add order — of the serial schedule.
+    """
+    for make_round in round_fns:
+        split_fn, permute_fn = make_round(chunks)
+        chunks = double_buffered_exchange(chunks, split_fn, permute_fn)
+    return list(chunks)
+
+
 # ---------------------------------------------------------------------------
 # Microbatched gradient accumulation.
 # ---------------------------------------------------------------------------

@@ -1,16 +1,21 @@
 # The declarative Engine API — the single entry point to every aggregation
-# path (format x schedule), with a pluggable registry for new formats.
-# See README "Engine API" for the migration table from the old flag calls.
+# path (format x schedule x topology), with a pluggable registry for new
+# formats, schedules and interconnect topologies.
+# See README "Engine API" / "Topology" for the spec grammar and guides.
 from .config import EngineConfig
 from .engine import Engine, EngineBundle
 from .registry import (Format, Schedule, available_formats,
-                       available_schedules, get_format, get_schedule,
-                       register_format, register_schedule, supported_specs)
+                       available_schedules, available_topologies,
+                       format_topologies, get_format, get_schedule,
+                       get_topology, register_format, register_schedule,
+                       register_topology, supported_specs,
+                       supported_topology_specs)
 from . import formats  # noqa: F401  (registers the built-in formats)
 
 __all__ = [
     "Engine", "EngineBundle", "EngineConfig",
     "Format", "Schedule", "register_format", "register_schedule",
-    "get_format", "get_schedule", "available_formats",
-    "available_schedules", "supported_specs",
+    "register_topology", "get_format", "get_schedule", "get_topology",
+    "available_formats", "available_schedules", "available_topologies",
+    "format_topologies", "supported_specs", "supported_topology_specs",
 ]

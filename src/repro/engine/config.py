@@ -1,12 +1,19 @@
 """Declarative Engine configuration — one validated object instead of the
 old flag cloud (``overlap=``, ``ell=``, ``blocked=``, ``layout=``).
 
-An :class:`EngineConfig` names a registered format and schedule plus the
-knobs every path shares (pipelining waves, ELL autotune caps, mesh axis,
-learning rate, precision).  Validation happens at construction: unknown
-names and unsupported combinations raise ``ValueError`` listing the
-registered options, so a typo dies at config time, not three layers down
-inside ``shard_map``.
+An :class:`EngineConfig` names a registered format, schedule and topology
+plus the knobs every path shares (pipelining waves, ELL autotune caps,
+mesh axis, learning rate, precision).  Validation happens at construction:
+unknown names and unsupported combinations raise ``ValueError`` listing
+the registered options, so a typo dies at config time, not three layers
+down inside ``shard_map``.
+
+Spec grammar: ``format[+schedule[+topology]]`` — ``"ell"``,
+``"ell+pipelined"``, ``"ell+pipelined+ring"``.  An omitted schedule takes
+the format's default; an omitted topology takes ``hypercube`` (the
+paper's NoC).  ``.spec`` is the canonical spelling and keeps the legacy
+two-part form whenever the topology is the default, so pre-topology spec
+strings, metric keys and checkpoints round-trip unchanged.
 """
 from __future__ import annotations
 
@@ -29,6 +36,9 @@ class EngineConfig:
     format:   registered edge layout — ``"coo"`` | ``"block"`` | ``"ell"``
     schedule: registered fold issue order — ``"serial"`` | ``"pipelined"``
               (``None`` → the format's default)
+    topology: registered interconnect — ``"hypercube"`` | ``"allpairs"`` |
+              ``"ring"`` | ``"torus2d"`` (``None`` → ``hypercube``, the
+              paper's NoC and the oracle schedule)
     n_chunks: feature waves for the pipelined schedule (``None`` → the
               backend default, :func:`repro.distributed.aggregate.default_n_chunks`)
     caps:     ELL degree-bucket caps override (``None`` → the autotuned
@@ -42,6 +52,7 @@ class EngineConfig:
 
     format: str = "coo"
     schedule: Optional[str] = None
+    topology: Optional[str] = None
     n_chunks: Optional[int] = None
     caps: Caps = None
     block_tiles: int = 4
@@ -53,7 +64,9 @@ class EngineConfig:
         fmt = registry.get_format(self.format)
         if self.schedule is None:
             object.__setattr__(self, "schedule", fmt.default_schedule)
-        registry.validate_combo(self.format, self.schedule)
+        if self.topology is None:
+            object.__setattr__(self, "topology", registry.DEFAULT_TOPOLOGY)
+        registry.validate_combo(self.format, self.schedule, self.topology)
         if self.n_chunks is not None and int(self.n_chunks) < 1:
             raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
         if self.block_tiles < 1:
@@ -67,25 +80,38 @@ class EngineConfig:
 
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "EngineConfig":
-        """Parse ``"ell+pipelined"`` / ``"coo"`` into a validated config.
+        """Parse ``"ell+pipelined+ring"`` / ``"ell+pipelined"`` / ``"coo"``
+        into a validated config.
 
-        The spec is ``format[+schedule]``; a bare format takes its default
-        schedule.  ``overrides`` set the remaining knobs (``n_chunks=4``,
-        ``lr=0.1``, ...).
+        The spec is ``format[+schedule[+topology]]``; a bare format takes
+        its default schedule, an omitted topology defaults to
+        ``hypercube``.  ``overrides`` set the remaining knobs
+        (``n_chunks=4``, ``lr=0.1``, ...).
         """
         parts = [p.strip() for p in spec.split("+")]
-        if not 1 <= len(parts) <= 2 or not all(parts):
+        if not 1 <= len(parts) <= 3 or not all(parts):
             raise ValueError(
-                f"bad engine spec {spec!r}: expected 'format' or "
-                f"'format+schedule'; valid specs: "
-                f"{registry.supported_specs()}")
+                f"bad engine spec {spec!r}: expected 'format', "
+                f"'format+schedule' or 'format+schedule+topology'; valid "
+                f"specs: {registry.supported_specs()} (+ optionally one of "
+                f"{registry.available_topologies()})")
         kw = dict(overrides)
         kw["format"] = parts[0]
-        if len(parts) == 2:
+        if len(parts) >= 2:
             kw["schedule"] = parts[1]
+        if len(parts) == 3:
+            kw["topology"] = parts[2]
         return cls(**kw)
 
     @property
     def spec(self) -> str:
-        """The canonical ``"format+schedule"`` string of this config."""
-        return f"{self.format}+{self.schedule}"
+        """The canonical spec string of this config.
+
+        Two-part ``"format+schedule"`` when the topology is the default
+        ``hypercube`` (pre-topology specs, metric keys and checkpoints
+        round-trip unchanged); ``"format+schedule+topology"`` otherwise.
+        """
+        base = f"{self.format}+{self.schedule}"
+        if self.topology == registry.DEFAULT_TOPOLOGY:
+            return base
+        return f"{base}+{self.topology}"

@@ -33,7 +33,8 @@ from repro.compat import shard_map
 
 from . import formats as _formats  # noqa: F401  (registers built-ins)
 from .config import EngineConfig
-from .registry import Format, Schedule, get_format, get_schedule
+from .registry import (Format, Schedule, get_format, get_schedule,
+                       get_topology)
 
 Dims = Tuple[Tuple[int, int], ...]
 
@@ -44,7 +45,8 @@ def _layout_cache_key(coo, *extra) -> tuple:
 
 
 class Engine:
-    """Resolved (format, schedule) pair + the builders around them."""
+    """Resolved (format, schedule, topology) triple + the builders around
+    them."""
 
     def __init__(self, config: Union[EngineConfig, str]):
         if isinstance(config, str):
@@ -52,6 +54,7 @@ class Engine:
         self.config: EngineConfig = config
         self.format: Format = get_format(config.format)
         self.schedule: Schedule = get_schedule(config.schedule)
+        self.topology = get_topology(config.topology)
 
     @property
     def spec(self) -> str:
@@ -100,10 +103,9 @@ class Engine:
             if mesh is None:
                 raise ValueError("Engine.build needs a mesh or n_cores")
             n_cores = int(mesh.shape[self.config.axis])
-        if n_cores & (n_cores - 1):
-            raise ValueError(
-                f"the hypercube schedule needs a power-of-two core count, "
-                f"got {n_cores}")
+        # the topology owns the core-count contract (every built-in needs a
+        # power-of-two count — the block partitioning does too)
+        self.topology.validate_cores(n_cores)
         return EngineBundle(engine=self, mesh=mesh, n_cores=n_cores,
                             graph=graph)
 
@@ -123,6 +125,7 @@ class EngineBundle:
         self.config = engine.config
         self.format = engine.format
         self.schedule = engine.schedule
+        self.topology = engine.topology
         self.mesh = mesh
         self.n_cores = n_cores
         self.ndim = int(np.log2(n_cores))
@@ -204,7 +207,7 @@ class EngineBundle:
             h = h @ params[n_layers - 1 - l]["w"]      # local combination
             h = self.format.device_aggregate(
                 self.config.schedule, self.axis, self.ndim, n_dst,
-                edges[l], h, self.n_chunks)
+                edges[l], h, self.n_chunks, topology=self.config.topology)
             if l != 0:
                 h = jnp.maximum(h, 0.0)
         return h                                       # [batch/P, classes]
@@ -331,7 +334,8 @@ class EngineBundle:
         def body(edge_leaves, x_local):
             return self.format.device_aggregate(
                 self.config.schedule, self.axis, self.ndim, n_dst,
-                edge_leaves, x_local, self.n_chunks)
+                edge_leaves, x_local, self.n_chunks,
+                topology=self.config.topology)
 
         fn = shard_map(
             body, mesh=mesh,

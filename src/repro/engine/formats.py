@@ -1,5 +1,11 @@
 """The three built-in formats and two schedules, registered.
 
+Formats declare their interconnect support via ``Format.topologies``
+(``None`` = every registered topology): all three built-ins leave it open —
+the exchange fold is layout-agnostic, so coo/block/ell ride hypercube,
+allpairs, ring or torus2d unchanged, and ``device_aggregate`` simply
+forwards the resolved topology name into the aggregation custom_vjps.
+
 Each format wraps the implementation that already owns its kernels and
 ``custom_vjp`` backward — nothing here re-registers a vjp.  All three
 inherit :meth:`Format.prepare_batch` (per-hop ``shard`` over a sampled
@@ -68,10 +74,10 @@ class CooFormat(Format):
                  "vals": es.vals}, es.n_dst, es.n_src)
 
     def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
-                         x_local, n_chunks):
+                         x_local, n_chunks, topology="hypercube"):
         return _agg.hypercube_aggregate(
             axis_name, ndim, n_dst, leaves["rows"][0], leaves["cols"][0],
-            leaves["vals"][0], x_local)
+            leaves["vals"][0], x_local, topology=topology)
 
 
 @register_format("block")
@@ -93,10 +99,10 @@ class BlockFormat(Format):
                  "vals": eb.vals}, eb.n_dst, eb.n_src)
 
     def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
-                         x_local, n_chunks):
+                         x_local, n_chunks, topology="hypercube"):
         return _agg.hypercube_aggregate_pipelined(
             axis_name, ndim, n_dst, leaves["rows"][0], leaves["cols"][0],
-            leaves["vals"][0], x_local, n_chunks)
+            leaves["vals"][0], x_local, n_chunks, topology=topology)
 
 
 @register_format("ell")
@@ -116,7 +122,7 @@ class EllFormat(Format):
         return (ee.tables, ee.n_dst, ee.n_src)
 
     def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,
-                         x_local, n_chunks):
+                         x_local, n_chunks, topology="hypercube"):
         lead = jax.tree_util.tree_leaves(leaves)[0].shape[0]
         if lead != 1:
             # fail loudly: stripping [0] below would silently drop the
@@ -129,4 +135,5 @@ class EllFormat(Format):
                 "mesh has the matching core count")
         tables = jax.tree_util.tree_map(lambda a: a[0], leaves)
         return _agg.hypercube_aggregate_ell(axis_name, ndim, n_dst, tables,
-                                            x_local, n_chunks)
+                                            x_local, n_chunks,
+                                            topology=topology)

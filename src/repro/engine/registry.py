@@ -1,13 +1,19 @@
-"""Pluggable format/schedule registry — the extension point of the Engine.
+"""Pluggable format/schedule/topology registry — the Engine's extension
+point.
 
 A **format** owns one edge layout end to end: how a COO graph becomes that
 layout (single-device ``build_local`` and per-sender ``shard``), the kernel
 pair that walks it (forward + the transpose-free backward, registered once
 as a ``custom_vjp`` inside the implementation it wraps), and the per-device
 aggregation body the distributed train step calls inside ``shard_map``.  A
-**schedule** names an issue order for the hypercube fold (serial vs the
+**schedule** names an issue order for the exchange fold (serial vs the
 double-buffered pipelined order); each format declares which schedules it
-supports.
+supports.  A **topology** (:class:`repro.topology.Topology`) owns the
+interconnect: the per-step exchange plan and the
+reduce-scatter/allgather primitives every format's aggregation rides —
+``hypercube`` (the paper's 4-D NoC, the default), ``allpairs`` (dense
+all-to-all reference), ``ring``, ``torus2d`` (orthogonal row/column
+multicast).
 
 Adding a fourth format is a registration, not a cross-cutting flag::
 
@@ -16,19 +22,22 @@ Adding a fourth format is a registration, not a cross-cutting flag::
     @register_format("csr")
     class CsrFormat(Format):
         schedules = ("serial",)
+        topologies = None            # every registered topology (default)
         def build_local(self, coo, cfg): ...
         def layer(self, layout, x, w, *, order, activate): ...
         def shard(self, coo, n_cores, cfg): ...
         def device_aggregate(self, schedule, axis_name, ndim, n_dst,
-                             leaves, x_local, n_chunks): ...
+                             leaves, x_local, n_chunks,
+                             topology="hypercube"): ...
 
 After that, ``EngineConfig(format="csr")`` / ``Engine("csr+serial")``
 reaches it everywhere — train step, benchmarks, examples — with no other
-code change.
+code change; a new topology is the same contract through
+``@register_topology`` (see :mod:`repro.topology`).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class Format:
@@ -41,6 +50,10 @@ class Format:
 
     name: str = "?"
     schedules: Tuple[str, ...] = ()
+    #: topology names this format supports; ``None`` = every registered
+    #: topology (all built-in formats ride any interconnect — the fold is
+    #: layout-agnostic); a format tied to one wire schedule restricts here
+    topologies: Optional[Tuple[str, ...]] = None
     #: True when ``build_local`` works on traced (jit-abstract) COO arrays;
     #: layout-building formats (block tiles, ELL plans) need concrete host
     #: arrays and must be built outside jit
@@ -88,8 +101,10 @@ class Format:
         return edges, dims
 
     def device_aggregate(self, schedule: str, axis_name: str, ndim: int,
-                         n_dst: int, leaves, x_local, n_chunks):
-        """Per-device body: ``y_local = (A @ x)_local`` under ``schedule``.
+                         n_dst: int, leaves, x_local, n_chunks,
+                         topology: str = "hypercube"):
+        """Per-device body: ``y_local = (A @ x)_local`` under ``schedule``,
+        exchanging partial rows over ``topology``.
 
         ``leaves`` is this device's slice of the ``shard`` pytree (leading
         core axis still present, length 1).  Called inside ``shard_map``.
@@ -110,10 +125,22 @@ class Schedule:
 
 _FORMATS: Dict[str, Format] = {}
 _SCHEDULES: Dict[str, Schedule] = {}
+_TOPOLOGIES: Dict = {}      # name -> repro.topology.Topology instance
+
+#: the topology every spec gets when none is named — the paper's NoC, and
+#: the schedule whose fp32 add order is the repo-wide oracle contract
+DEFAULT_TOPOLOGY = "hypercube"
 
 
-def _options(kind: str, table: Dict) -> str:
-    return f"registered {kind}s: {sorted(table)}"
+def _options(plural: str, table: Dict) -> str:
+    return f"registered {plural}: {sorted(table)}"
+
+
+def _ensure_topologies() -> None:
+    """Import the built-in topologies on first lookup (registration lives
+    in ``repro/topology/__init__.py`` to keep the modules cycle-free)."""
+    if not _TOPOLOGIES:
+        import repro.topology  # noqa: F401  (registers the built-ins)
 
 
 def register_format(name: str) -> Callable:
@@ -138,12 +165,23 @@ def register_schedule(name: str) -> Callable:
     return deco
 
 
+def register_topology(name: str) -> Callable:
+    """Class decorator: instantiate and register a
+    :class:`repro.topology.Topology`."""
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _TOPOLOGIES[name] = inst
+        return cls
+    return deco
+
+
 def get_format(name: str) -> Format:
     try:
         return _FORMATS[name]
     except KeyError:
         raise ValueError(f"unknown format {name!r}; "
-                         + _options("format", _FORMATS)) from None
+                         + _options("formats", _FORMATS)) from None
 
 
 def get_schedule(name: str) -> Schedule:
@@ -151,7 +189,16 @@ def get_schedule(name: str) -> Schedule:
         return _SCHEDULES[name]
     except KeyError:
         raise ValueError(f"unknown schedule {name!r}; "
-                         + _options("schedule", _SCHEDULES)) from None
+                         + _options("schedules", _SCHEDULES)) from None
+
+
+def get_topology(name: str):
+    _ensure_topologies()
+    try:
+        return _TOPOLOGIES[name]
+    except KeyError:
+        raise ValueError(f"unknown topology {name!r}; "
+                         + _options("topologies", _TOPOLOGIES)) from None
 
 
 def available_formats() -> List[str]:
@@ -162,14 +209,40 @@ def available_schedules() -> List[str]:
     return sorted(_SCHEDULES)
 
 
+def available_topologies() -> List[str]:
+    _ensure_topologies()
+    return sorted(_TOPOLOGIES)
+
+
+def format_topologies(fmt: str) -> List[str]:
+    """Topology names ``fmt`` supports (its restriction, or all)."""
+    f = get_format(fmt)
+    if f.topologies is None:
+        return available_topologies()
+    return sorted(f.topologies)
+
+
 def supported_specs() -> List[str]:
-    """Every valid ``"format+schedule"`` combination, sorted."""
+    """Every valid ``"format+schedule"`` combination, sorted.
+
+    Two-part specs are the CANONICAL spellings (topology defaults to
+    ``hypercube``) — benchmark metric keys and saved-spec round-trips are
+    keyed on them; :func:`supported_topology_specs` enumerates the full
+    three-axis product.
+    """
     return sorted(f"{f}+{s}" for f, fmt in _FORMATS.items()
                   for s in fmt.schedules)
 
 
-def validate_combo(fmt: str, schedule: str) -> None:
-    """Raise ``ValueError`` (listing the options) on any invalid pair."""
+def supported_topology_specs() -> List[str]:
+    """Every valid ``"format+schedule+topology"`` combination, sorted."""
+    return sorted(f"{f}+{s}+{t}" for f, fmt in _FORMATS.items()
+                  for s in fmt.schedules for t in format_topologies(f))
+
+
+def validate_combo(fmt: str, schedule: str,
+                   topology: Optional[str] = None) -> None:
+    """Raise ``ValueError`` (listing the options) on any invalid combo."""
     f = get_format(fmt)
     get_schedule(schedule)          # unknown schedule name raises here
     if schedule not in f.schedules:
@@ -177,3 +250,10 @@ def validate_combo(fmt: str, schedule: str) -> None:
             f"format {fmt!r} does not support schedule {schedule!r} "
             f"(it supports {list(f.schedules)}); valid combinations: "
             f"{supported_specs()}")
+    if topology is not None:
+        get_topology(topology)      # unknown topology name raises here
+        if f.topologies is not None and topology not in f.topologies:
+            raise ValueError(
+                f"format {fmt!r} does not support topology {topology!r} "
+                f"(it supports {sorted(f.topologies)}); valid "
+                f"combinations: {supported_topology_specs()}")

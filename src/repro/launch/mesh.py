@@ -28,6 +28,29 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_topology_mesh(n_cores: int, topology: str = "hypercube",
+                       axis: str = "model"):
+    """Core-axis mesh validated against a registered topology.
+
+    The topology owns the core-count contract (``Topology.validate_cores``
+    — every built-in wants a power of two), so a bad count dies here with
+    the topology's own error instead of three layers down inside
+    ``shard_map``.  The mesh itself stays one-dimensional: grid structure
+    (e.g. the 2-D torus's R×C) lives in the topology's ``ppermute``
+    schedules, not in the mesh shape, so every topology shares one mesh
+    form and one ``PartitionSpec`` rule.
+    """
+    from repro.engine.registry import get_topology
+
+    get_topology(topology).validate_cores(n_cores)
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices for n_cores={n_cores}, have "
+            f"{len(jax.devices())} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count")
+    return jax.make_mesh((n_cores,), (axis,))
+
+
 # Hardware constants (TPU v5e-like target, per assignment):
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -52,8 +52,9 @@ class Trainer:
 
     Parameters
     ----------
-    engine: spec string (``"ell+pipelined"``), :class:`EngineConfig`, or
-        :class:`Engine` — every registered format×schedule works.
+    engine: spec string (``"ell+pipelined"``, or with an explicit
+        interconnect ``"ell+pipelined+ring"``), :class:`EngineConfig`, or
+        :class:`Engine` — every registered format×schedule×topology works.
     dataset: a :class:`GraphDataset` or a dataset name for
         :func:`make_dataset` (with ``scale``/``feat_dim``).
     n_cores: hypercube size; needs ``len(jax.devices()) >= n_cores``
@@ -102,12 +103,11 @@ class Trainer:
             dataset = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
         self.dataset = dataset
         if mesh is None:
-            if len(jax.devices()) < n_cores:
-                raise RuntimeError(
-                    f"need {n_cores} devices for n_cores={n_cores}, have "
-                    f"{len(jax.devices())} — set XLA_FLAGS="
-                    "--xla_force_host_platform_device_count")
-            mesh = jax.make_mesh((n_cores,), (engine.config.axis,))
+            # topology-aware construction: the engine's interconnect
+            # validates the core count before any device state is touched
+            from repro.launch.mesh import make_topology_mesh
+            mesh = make_topology_mesh(n_cores, engine.config.topology,
+                                      engine.config.axis)
         self.mesh = mesh
         self.n_cores = int(mesh.shape[engine.config.axis])
         self.bundle = engine.build(mesh)

@@ -1,0 +1,25 @@
+# The interconnect as a first-class Engine axis: Topology base class,
+# differentiable exchange primitives with custom_vjp mirror backwards, and
+# the four built-in topologies.  Registration happens HERE (not in the
+# topology modules) so the modules stay import-cycle-free: they depend only
+# on jax + the exchange helpers, while this package init touches the engine
+# registry once everything is defined.
+from .base import (ExchangePlan, Topology, allgather, exchange,
+                   reduce_scatter)
+from .allpairs import AllPairsTopology
+from .hypercube import HypercubeTopology
+from .ring import RingTopology
+from .torus2d import Torus2DTopology
+
+from repro.engine.registry import register_topology
+
+register_topology("hypercube")(HypercubeTopology)
+register_topology("allpairs")(AllPairsTopology)
+register_topology("ring")(RingTopology)
+register_topology("torus2d")(Torus2DTopology)
+
+__all__ = [
+    "ExchangePlan", "Topology", "exchange", "reduce_scatter", "allgather",
+    "HypercubeTopology", "AllPairsTopology", "RingTopology",
+    "Torus2DTopology",
+]

@@ -1,0 +1,59 @@
+"""All-pairs topology — the dense all-to-all reference.
+
+Every (sender, receiver) pair exchanges its block directly: no fold tree,
+no partial-sum reuse on the wire.  ``P − 1`` serialized rotation rounds
+(rotation *s* ships each core's block for peer ``(i+s) mod P`` straight to
+that peer), each carrying one ``n_rows/P`` block — the direct realization
+of "ship every message point-to-point", which is what a full crossbar
+would do and what the structured topologies are benchmarked against.
+Bytes per core are still the optimal ``n_rows·(1 − 1/P)`` (only owed
+blocks travel); the cost is the step count: ``P − 1`` rounds versus the
+hypercube's ``log₂P``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Topology
+
+
+def _rot_perm(n_cores: int, s: int) -> list:
+    return [(i, (i + s) % n_cores) for i in range(n_cores)]
+
+
+class AllPairsTopology(Topology):
+    """Dense all-to-all: one direct message per (sender, receiver) pair."""
+
+    description = ("dense all-to-all reference: P-1 rotation rounds, one "
+                   "direct block per peer, no fold-tree reuse")
+
+    def steps(self, n_cores: int) -> int:
+        return n_cores - 1
+
+    def reduce_scatter(self, partial, axis_name, n_cores):
+        if n_cores == 1:
+            return partial[0]
+        idx = jax.lax.axis_index(axis_name)
+        acc = jnp.take(partial, idx, axis=0)          # my own contribution
+        for s in range(1, n_cores):
+            # ship my block for peer (idx+s) straight to it; receive, from
+            # peer (idx-s), ITS partial block for me — one pair per round
+            send = jnp.take(partial, (idx + s) % n_cores, axis=0)
+            acc = acc + jax.lax.ppermute(send, axis_name,
+                                         _rot_perm(n_cores, s))
+        return acc
+
+    def allgather(self, x, axis_name, n_cores):
+        if n_cores == 1:
+            return x[None]
+        idx = jax.lax.axis_index(axis_name)
+        blocks = [x]                                  # position k ← core idx-k
+        for s in range(1, n_cores):
+            blocks.append(jax.lax.ppermute(x, axis_name,
+                                           _rot_perm(n_cores, s)))
+        stacked = jnp.stack(blocks)
+        # stacked[k] came from core (idx - k) mod P → core order is a
+        # device-dependent rotation
+        order = (idx - jnp.arange(n_cores)) % n_cores
+        return jnp.take(stacked, order, axis=0)

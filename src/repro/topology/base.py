@@ -1,0 +1,255 @@
+"""Topology base class — the interconnect as a first-class Engine axis.
+
+The paper's headline contribution is the *orthogonal-topology on-chip
+network*: which wires exist between cores, and in what order partial rows
+travel them, is a design axis independent of the edge format and the fold
+issue order.  A :class:`Topology` owns exactly that axis: the per-step
+exchange plan (peer schedule, message partitioning) and the collective
+primitives the distributed aggregation runs inside ``shard_map`` —
+
+  * :meth:`Topology.reduce_scatter` — fold per-owner partial rows
+    ``[P, t, ...]`` (row-blocks in core order) down to this device's fully
+    reduced ``[t, ...]`` block;
+  * :meth:`Topology.allgather` — the mirror: replicate ``[t, ...]`` into
+    every device's ``[P, t, ...]`` in core order (the transpose-free
+    backward's error-row gather rides this);
+  * pipelined variants that split the feature dimension into waves
+    (:func:`repro.core.schedule.feature_waves`) so wire time hides under
+    MAC work, and :meth:`Topology.fold_pipelined`, the fused local-SpMM +
+    exchange the pipelined schedule calls.
+
+Module-level :func:`reduce_scatter` / :func:`allgather` / :func:`exchange`
+are the *differentiable* entry points: ``custom_vjp`` mirrors make the
+backward of a reduce-scatter the same topology's allgather (and vice
+versa), so gradients ride the mirror schedule of whatever interconnect the
+forward used — no transposed exchange schedule exists anywhere.
+
+Topologies register via ``@repro.engine.register_topology`` (the existing
+engine registry); the built-ins live in sibling modules and are registered
+by :mod:`repro.topology.__init__`.  A new interconnect is a ~100-line
+registration::
+
+    from repro.engine import register_topology
+    from repro.topology import Topology
+
+    @register_topology("dragonfly")
+    class Dragonfly(Topology):
+        description = "two-level groups, one global hop"
+        def steps(self, n_cores): ...
+        def reduce_scatter(self, partial, axis_name, n_cores): ...
+        def allgather(self, x, axis_name, n_cores): ...
+
+After that ``Engine("ell+pipelined+dragonfly")`` reaches it everywhere —
+train step, Trainer, benchmarks — with no other code change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import feature_waves
+
+
+def _wave_slices(x, n_chunks: int):
+    waves = feature_waves(x.shape[-1], n_chunks)
+    return [jax.lax.slice_in_dim(x, w.start, w.stop, axis=-1) for w in waves]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """One topology's per-step exchange plan for a fixed core count.
+
+    ``steps`` is the number of serialized exchange rounds of one
+    reduce-scatter (= one allgather, by mirror symmetry);
+    ``bytes_per_core`` the wire bytes each core ships per reduce-scatter of
+    ``n_rows`` rows × ``d`` features; ``max_step_rows`` the largest single
+    message (rows) any step puts on a wire — the buffer a real NoC must
+    provision.  Host-side accounting only: the benchmarks record it, the
+    roofline consumes it; no traced code reads a plan.
+    """
+
+    topology: str
+    n_cores: int
+    steps: int
+    bytes_per_core: int
+    max_step_rows: int
+    axis: str = "model"
+
+
+class Topology:
+    """Base class for registered interconnect topologies (module docstring).
+
+    Subclasses implement :meth:`steps`, :meth:`reduce_scatter` and
+    :meth:`allgather`; ``name`` is filled in by ``register_topology``.  The
+    pipelined variants and :meth:`fold_pipelined` have wave-split defaults
+    any topology inherits; hypercube overrides them with the fused
+    double-buffered fold.  Collectives run INSIDE ``shard_map`` over the
+    engine's core axis; everything else is host-side trace-time Python.
+    """
+
+    name: str = "?"
+    description: str = ""
+
+    # -- plan / cost model (host side) ---------------------------------------
+    def validate_cores(self, n_cores: int) -> None:
+        """Raise ``ValueError`` when this topology cannot be built over
+        ``n_cores`` cores.  Every built-in runs on any power of two (the
+        engine's block partitioning already requires it)."""
+        if n_cores < 1 or n_cores & (n_cores - 1):
+            raise ValueError(
+                f"the {self.name} topology needs a power-of-two core "
+                f"count, got {n_cores}")
+
+    def steps(self, n_cores: int) -> int:
+        """Serialized exchange rounds per reduce-scatter."""
+        raise NotImplementedError
+
+    def bytes_per_core(self, n_rows: int, d: int, n_cores: int,
+                       dtype_bytes: int = 4) -> int:
+        """Wire bytes each core ships per reduce-scatter of ``n_rows``
+        pre-reduced rows.  Default: the bandwidth-optimal
+        ``n_rows·(1 − 1/P)`` — every built-in ships exactly the blocks that
+        must leave, never raw redundant rows."""
+        if n_cores <= 1:
+            return 0
+        return int(n_rows * (n_cores - 1) // n_cores) * d * dtype_bytes
+
+    def max_step_rows(self, n_rows: int, n_cores: int) -> int:
+        """Largest single-step message, in rows (default: one core block)."""
+        return n_rows // n_cores if n_cores > 1 else 0
+
+    def plan(self, n_rows: int, d: int, n_cores: int,
+             dtype_bytes: int = 4, axis: str = "model") -> ExchangePlan:
+        """The per-step exchange plan (steps + wire cost) for ``n_cores``."""
+        self.validate_cores(n_cores)
+        return ExchangePlan(
+            topology=self.name, n_cores=n_cores,
+            steps=self.steps(n_cores),
+            bytes_per_core=self.bytes_per_core(n_rows, d, n_cores,
+                                               dtype_bytes),
+            max_step_rows=self.max_step_rows(n_rows, n_cores), axis=axis)
+
+    # -- collectives (inside shard_map) --------------------------------------
+    def reduce_scatter(self, partial: jnp.ndarray, axis_name: str,
+                       n_cores: int) -> jnp.ndarray:
+        """``[P, t, ...]`` per-owner partials (core order) → this device's
+        fully reduced ``[t, ...]`` block."""
+        raise NotImplementedError
+
+    def allgather(self, x: jnp.ndarray, axis_name: str,
+                  n_cores: int) -> jnp.ndarray:
+        """``[t, ...]`` → ``[P, t, ...]`` in core order on every device
+        (the mirror of :meth:`reduce_scatter`)."""
+        raise NotImplementedError
+
+    def reduce_scatter_pipelined(self, partial, axis_name: str,
+                                 n_cores: int, n_chunks: int) -> jnp.ndarray:
+        """Wave-split reduce-scatter: every wave's exchange is issued
+        independently so XLA can overlap wave *k*'s wire time with wave
+        *k+1*'s sends.  Default = one serial fold per feature wave; the
+        reduction order per element is the serial schedule's."""
+        chunks = _wave_slices(partial, n_chunks)
+        if len(chunks) == 1:
+            return self.reduce_scatter(partial, axis_name, n_cores)
+        outs = [self.reduce_scatter(c, axis_name, n_cores) for c in chunks]
+        return jnp.concatenate(outs, axis=-1)
+
+    def allgather_pipelined(self, x, axis_name: str, n_cores: int,
+                            n_chunks: int) -> jnp.ndarray:
+        """Wave-split mirror of :meth:`reduce_scatter_pipelined`."""
+        chunks = _wave_slices(x, n_chunks)
+        if len(chunks) == 1:
+            return self.allgather(x, axis_name, n_cores)
+        outs = [self.allgather(c, axis_name, n_cores) for c in chunks]
+        return jnp.concatenate(outs, axis=-1)
+
+    def fold_pipelined(self, axis_name: str, n_cores: int, n_chunks: int,
+                       partials_fn, x_local) -> jnp.ndarray:
+        """Fused local SpMM + exchange, one feature wave at a time.
+
+        ``partials_fn(x_chunk) -> [P, t, dc]`` is the format's local
+        pre-reduction for one wave.  The default computes each wave's
+        partials then folds them — the waves' exchanges are independent
+        dataflow, so wave *k*'s wire time hides under wave *k+1*'s SpMM.
+        Hypercube overrides this with the ping-pong fold that also issues
+        the first round's send before the still-owned half's SpMM runs.
+        """
+        waves = _wave_slices(x_local, n_chunks)
+        if len(waves) == 1:
+            return self.reduce_scatter(partials_fn(x_local), axis_name,
+                                       n_cores)
+        outs = [self.reduce_scatter(partials_fn(xc), axis_name, n_cores)
+                for xc in waves]
+        return jnp.concatenate(outs, axis=-1)
+
+
+def _topo(name: str) -> Topology:
+    # lazy: breaks the aggregate ↔ engine ↔ topology import cycle
+    from repro.engine.registry import get_topology
+    return get_topology(name)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable primitives: custom_vjp mirrors, so the transpose-free
+# backward rides ANY registered topology.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def reduce_scatter(topology: str, axis_name: str, n_cores: int,
+                   partial: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable ``[P, t, ...] → [t, ...]`` fold over ``topology``.
+
+    The backward is the SAME topology's :func:`allgather` (reduce-scatter's
+    linear transpose): error rows travel the mirror schedule of the wires
+    the forward used.  Call inside ``shard_map``.
+    """
+    return _topo(topology).reduce_scatter(partial, axis_name, n_cores)
+
+
+def _rs_fwd(topology, axis_name, n_cores, partial):
+    return reduce_scatter(topology, axis_name, n_cores, partial), None
+
+
+def _rs_bwd(topology, axis_name, n_cores, _, ct):
+    return (_topo(topology).allgather(ct, axis_name, n_cores),)
+
+
+reduce_scatter.defvjp(_rs_fwd, _rs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def allgather(topology: str, axis_name: str, n_cores: int,
+              x: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable ``[t, ...] → [P, t, ...]`` gather over ``topology``;
+    the backward is the same topology's :func:`reduce_scatter` (cotangent
+    blocks fold back to their owners over the mirror wires)."""
+    return _topo(topology).allgather(x, axis_name, n_cores)
+
+
+def _ag_fwd(topology, axis_name, n_cores, x):
+    return allgather(topology, axis_name, n_cores, x), None
+
+
+def _ag_bwd(topology, axis_name, n_cores, _, ct):
+    return (_topo(topology).reduce_scatter(ct, axis_name, n_cores),)
+
+
+allgather.defvjp(_ag_fwd, _ag_bwd)
+
+
+def exchange(x: jnp.ndarray, plan: ExchangePlan,
+             op: str = "reduce_scatter") -> jnp.ndarray:
+    """One differentiable exchange under ``plan`` (see :meth:`Topology.plan`).
+
+    ``op="reduce_scatter"`` folds ``[P, t, ...]`` partials to the owned
+    block; ``op="allgather"`` replicates the owned block.  Both ride the
+    plan's topology with the custom_vjp mirror backward.
+    """
+    if op == "reduce_scatter":
+        return reduce_scatter(plan.topology, plan.axis, plan.n_cores, x)
+    if op == "allgather":
+        return allgather(plan.topology, plan.axis, plan.n_cores, x)
+    raise ValueError(f"unknown exchange op {op!r}; "
+                     "expected 'reduce_scatter' or 'allgather'")

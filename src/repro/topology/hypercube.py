@@ -1,0 +1,280 @@
+"""Hypercube topology — the paper's 4-D NoC as dimension-ordered folds.
+
+Canonical home of the exchange loops that used to live inline in
+:mod:`repro.distributed.aggregate` (which keeps thin delegating shims):
+``log₂P`` rounds of pairwise ``ppermute`` along hypercube dimensions, high
+bit first, plus the double-buffered (ping-pong Block-Message, §4.2) and
+fused-SpMM (§4.3, Fig. 9) variants.  fp32 add order is the repo-wide
+serial contract — the ``coo+serial`` oracle and the block format's
+bit-exactness both ride these exact functions.
+
+Also home of the *generalized* bit-order fold (:func:`fold_bits` /
+:func:`unfold_bits`): the same dimension-exchange machinery over an
+arbitrary bit sequence, which :mod:`repro.topology.torus2d` uses to route
+its two feature halves along orthogonal dimension orders in parallel.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import feature_waves
+from repro.distributed.overlap import double_buffered_rounds
+
+from .base import Topology
+
+
+def _dim_perm(n_cores: int, bit: int) -> list:
+    return [(i, i ^ (1 << bit)) for i in range(n_cores)]
+
+
+def hypercube_reduce_scatter(partial: jnp.ndarray, axis_name: str,
+                             ndim: int) -> jnp.ndarray:
+    """Fold per-owner partials across the hypercube, high dimension first.
+
+    ``partial``: [P, t, ...] — row-blocks ordered by owner core id.  Returns
+    [t, ...]: this device's rows, fully reduced.  Because blocks are in
+    ascending core order and we process the top bit first, 'my half' is
+    always a contiguous slice — each round halves the buffer (the wire bytes
+    form the geometric series t·(1 − 1/P), same as a reduce-scatter).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    buf = partial
+    for b in reversed(range(ndim)):
+        half = buf.shape[0] // 2
+        low, high = buf[:half], buf[half:]
+        my_bit = (idx >> b) & 1
+        mine = jnp.where(my_bit == 0, low, high)
+        send = jnp.where(my_bit == 0, high, low)
+        recv = jax.lax.ppermute(send, axis_name, _dim_perm(n_cores, b))
+        buf = mine + recv
+    return buf[0]
+
+
+def hypercube_allgather(x: jnp.ndarray, axis_name: str, ndim: int
+                        ) -> jnp.ndarray:
+    """Mirror schedule (transpose of the reduce-scatter): after ``ndim``
+    doubling rounds every device holds [P, t, ...] in core order."""
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    buf = x[None]
+    for b in range(ndim):
+        other = jax.lax.ppermute(buf, axis_name, _dim_perm(n_cores, b))
+        my_bit = (idx >> b) & 1
+        lo = jnp.concatenate([buf, other], axis=0)
+        hi = jnp.concatenate([other, buf], axis=0)
+        buf = jnp.where(my_bit == 0, lo, hi)
+    return buf
+
+
+def _fold_round(idx, axis_name: str, n_cores: int, b: int):
+    """One double-buffered fold round over dimension ``b``: the
+    ``(split, permute)`` factory :func:`double_buffered_rounds` consumes.
+    The split halves are derived from the CURRENT buffer (the fold shrinks
+    it every round); shared by the pipelined reduce-scatter and the fused
+    SpMM fold so their wire schedule can never drift apart."""
+    def round_fns(bufs):
+        half = bufs[0].shape[0] // 2
+        my_bit = (idx >> b) & 1
+        perm = _dim_perm(n_cores, b)
+
+        def split(buf, my_bit=my_bit, half=half):
+            mine = jax.lax.dynamic_slice_in_dim(buf, my_bit * half,
+                                                half, 0)
+            send = jax.lax.dynamic_slice_in_dim(buf, (1 - my_bit) * half,
+                                                half, 0)
+            return mine, send
+
+        return split, lambda s, perm=perm: jax.lax.ppermute(
+            s, axis_name, perm)
+    return round_fns
+
+
+def hypercube_reduce_scatter_pipelined(partial: jnp.ndarray, axis_name: str,
+                                       ndim: int, n_chunks: int = 2
+                                       ) -> jnp.ndarray:
+    """Double-buffered fold — bit-identical to the serial reduce-scatter.
+
+    The feature dimension is split into ``n_chunks`` waves
+    (:func:`repro.core.schedule.feature_waves`); within every round all
+    waves' ``ppermute`` sends are issued before any wave's local add
+    consumes a received half, so the wire transfer of wave *k+1* overlaps
+    the MAC work of wave *k* — the paper's ping-pong Block-Message buffers
+    (§4.2), expressed as dataflow for XLA's latency-hiding scheduler.  The
+    round sequence is the topology's step count, driven through
+    :func:`repro.distributed.overlap.double_buffered_rounds`.  Per-element
+    add order matches :func:`hypercube_reduce_scatter` exactly, so fp32
+    results are bit-equal.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    n_cores = 1 << ndim
+    waves = feature_waves(partial.shape[-1], n_chunks)
+    bufs = [jax.lax.slice_in_dim(partial, w.start, w.stop, axis=-1)
+            for w in waves]
+    bufs = double_buffered_rounds(
+        bufs, [_fold_round(idx, axis_name, n_cores, b)
+               for b in reversed(range(ndim))])
+    return jnp.concatenate([b[0] for b in bufs], axis=-1)
+
+
+def hypercube_allgather_pipelined(x: jnp.ndarray, axis_name: str, ndim: int,
+                                  n_chunks: int = 2) -> jnp.ndarray:
+    """Mirror of the pipelined fold (the backward pass's gather): the same
+    feature waves, each wave one ``all_gather`` in core order.
+
+    All waves' collectives are issued independently before any result is
+    consumed, so wave *k*'s wire time hides under wave *k+1*'s — and each
+    wave lowers to XLA's native all-gather, which schedules the
+    dimension-ordered doubling itself instead of paying ``ndim`` rounds of
+    hand-rolled concatenate+select copies (the gather moves bytes only, so
+    the result is bit-identical to :func:`hypercube_allgather`).
+    """
+    del ndim  # the native collective derives the schedule from the mesh
+    waves = feature_waves(x.shape[-1], n_chunks)
+    if len(waves) == 1:
+        return jax.lax.all_gather(x, axis_name)
+    gathered = [jax.lax.all_gather(
+        jax.lax.slice_in_dim(x, w.start, w.stop, axis=-1), axis_name)
+        for w in waves]
+    return jnp.concatenate(gathered, axis=-1)
+
+
+def hypercube_fold_pipelined(axis_name: str, ndim: int, n_chunks: int,
+                             partials_fn, x_local):
+    """Fused local SpMM + double-buffered fold, layout-agnostic.
+
+    ``partials_fn(x_chunk) -> [P, dpc, dc]`` is the local pre-reduction for
+    one feature wave — the Block-Message tile scatter or the pre-reduced
+    ELL gather; the fold around it is identical.  Per feature wave the SpMM
+    for the half-cube this device does NOT own is computed first and its
+    round-(ndim-1) ``ppermute`` issued immediately; the SpMM for the
+    still-owned half then runs while that first transfer is on the wire
+    (paper §4.3, Fig. 9 — message passing overlapped with MAC work).  The
+    remaining rounds use the double-buffered fold.
+    """
+    n_cores = 1 << ndim
+    if ndim == 0:
+        return partials_fn(x_local)[0]
+    idx = jax.lax.axis_index(axis_name)
+    waves = feature_waves(x_local.shape[-1], n_chunks)
+    b0 = ndim - 1                     # top bit: the first fold round
+    half = n_cores // 2
+    my_bit0 = (idx >> b0) & 1
+    perm0 = _dim_perm(n_cores, b0)
+    mines, recvs = [], []
+    for w in waves:
+        xc = jax.lax.slice_in_dim(x_local, w.start, w.stop, axis=-1)
+        # wave k's SpMM runs while wave k-1's send (issued below, consumed
+        # only after the loop) is on the wire — the ping-pong buffer
+        p = partials_fn(xc)
+        send = jax.lax.dynamic_slice_in_dim(p, (1 - my_bit0) * half,
+                                            half, 0)
+        recvs.append(jax.lax.ppermute(send, axis_name, perm0))
+        mines.append(jax.lax.dynamic_slice_in_dim(p, my_bit0 * half,
+                                                  half, 0))
+    bufs = [m + r for m, r in zip(mines, recvs)]
+    bufs = double_buffered_rounds(
+        bufs, [_fold_round(idx, axis_name, n_cores, b)
+               for b in reversed(range(ndim - 1))])
+    return jnp.concatenate([b[0] for b in bufs], axis=-1)   # [dpc, d]
+
+
+# ---------------------------------------------------------------------------
+# Generalized bit-order folds (torus2d routes feature halves along
+# orthogonal dimension orders through these).
+# ---------------------------------------------------------------------------
+def fold_bits(partial: jnp.ndarray, axis_name: str, n_cores: int,
+              bit_order: Sequence[int]) -> jnp.ndarray:
+    """Dimension-exchange reduce-scatter over an ARBITRARY bit sequence.
+
+    ``bit_order`` lists which hypercube dimension each round exchanges
+    (every bit of ``log₂P`` exactly once).  Before each round the buffer's
+    row-blocks are reordered by a STATIC permutation so the blocks whose
+    destination-id bit is 0 form the first half — the 'mine'/'send' halves
+    then split contiguously exactly like the high-bit-first special case.
+    ``bit_order = [ndim-1, …, 0]`` reproduces
+    :func:`hypercube_reduce_scatter`'s schedule (the sort is the identity
+    every round).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    buf = partial
+    slots: List[int] = list(range(n_cores))
+    for b in bit_order:
+        order = sorted(range(len(slots)), key=lambda k: (slots[k] >> b) & 1)
+        if order != list(range(len(slots))):
+            buf = buf[np.asarray(order)]
+            slots = [slots[k] for k in order]
+        half = len(slots) // 2
+        low, high = buf[:half], buf[half:]
+        my_bit = (idx >> b) & 1
+        mine = jnp.where(my_bit == 0, low, high)
+        send = jnp.where(my_bit == 0, high, low)
+        recv = jax.lax.ppermute(send, axis_name, _dim_perm(n_cores, b))
+        buf = mine + recv
+        # keep the bit-b = 0 representatives: low[k] and high[k] agree on
+        # every remaining bit (the slot list enumerates a subcube in
+        # ascending order, which the stable sort preserves)
+        slots = slots[:half]
+    return buf[0]
+
+
+def unfold_bits(x: jnp.ndarray, axis_name: str, n_cores: int,
+                bit_order: Sequence[int]) -> jnp.ndarray:
+    """Mirror of :func:`fold_bits`: doubling rounds over ``reversed(
+    bit_order)``, then a static reorder to ascending core order.  With the
+    hypercube order the reorder is the identity and this is exactly
+    :func:`hypercube_allgather`."""
+    idx = jax.lax.axis_index(axis_name)
+    buf = x[None]
+    slots: List[int] = [0]
+    for b in reversed(list(bit_order)):
+        other = jax.lax.ppermute(buf, axis_name, _dim_perm(n_cores, b))
+        my_bit = (idx >> b) & 1
+        lo = jnp.concatenate([buf, other], axis=0)
+        hi = jnp.concatenate([other, buf], axis=0)
+        buf = jnp.where(my_bit == 0, lo, hi)      # bit-b = 0 blocks first
+        slots = slots + [s | (1 << b) for s in slots]
+    order = np.argsort(np.asarray(slots))
+    if not np.array_equal(order, np.arange(len(slots))):
+        buf = buf[order]
+    return buf
+
+
+class HypercubeTopology(Topology):
+    """log₂P dimension-ordered folds — the paper's 4-D NoC, and the repo's
+    fp32 oracle schedule (serial add order is THE reference order)."""
+
+    description = ("log2(P)-step dimension-ordered pairwise exchange, high "
+                   "bit first; the paper's 4-D NoC and the fp32 oracle "
+                   "schedule")
+
+    def steps(self, n_cores: int) -> int:
+        return max(n_cores.bit_length() - 1, 0)
+
+    def max_step_rows(self, n_rows: int, n_cores: int) -> int:
+        return n_rows // 2 if n_cores > 1 else 0   # the first (top-bit) round
+
+    def reduce_scatter(self, partial, axis_name, n_cores):
+        return hypercube_reduce_scatter(partial, axis_name,
+                                        self.steps(n_cores))
+
+    def allgather(self, x, axis_name, n_cores):
+        return hypercube_allgather(x, axis_name, self.steps(n_cores))
+
+    def reduce_scatter_pipelined(self, partial, axis_name, n_cores,
+                                 n_chunks):
+        return hypercube_reduce_scatter_pipelined(
+            partial, axis_name, self.steps(n_cores), n_chunks)
+
+    def allgather_pipelined(self, x, axis_name, n_cores, n_chunks):
+        return hypercube_allgather_pipelined(
+            x, axis_name, self.steps(n_cores), n_chunks)
+
+    def fold_pipelined(self, axis_name, n_cores, n_chunks, partials_fn,
+                       x_local):
+        return hypercube_fold_pipelined(axis_name, self.steps(n_cores),
+                                        n_chunks, partials_fn, x_local)

@@ -1,0 +1,59 @@
+"""Ring topology — bandwidth-optimal reduce-scatter / allgather.
+
+Each core talks only to its two neighbours.  The reduce-scatter passes
+running partial sums around the ring: block *b* starts at core ``b+1``,
+accumulates one core's contribution per hop, and arrives fully reduced at
+its owner after ``P − 1`` hops.  Every step every link carries exactly one
+``n_rows/P`` block — the smallest per-step message of any topology here
+(what makes rings the bandwidth-optimal choice when link count, not
+latency, is the constraint).  The allgather is the mirror: each core's
+block circulates ``P − 1`` hops until everyone holds all of them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Topology
+
+
+def _right_perm(n_cores: int) -> list:
+    return [(i, (i + 1) % n_cores) for i in range(n_cores)]
+
+
+class RingTopology(Topology):
+    """Neighbour-only ring: P-1 steps, one n_rows/P block per link-step."""
+
+    description = ("bandwidth-optimal ring: P-1 neighbour hops of running "
+                   "partial sums, minimum per-step message size")
+
+    def steps(self, n_cores: int) -> int:
+        return n_cores - 1
+
+    def reduce_scatter(self, partial, axis_name, n_cores):
+        if n_cores == 1:
+            return partial[0]
+        idx = jax.lax.axis_index(axis_name)
+        perm = _right_perm(n_cores)
+        # at step s this core ships the running sum for owner (idx - s);
+        # what arrives is the sum for (idx - s - 1), to which this core
+        # adds its own partial before the next hop
+        send = jnp.take(partial, (idx - 1) % n_cores, axis=0)
+        for s in range(1, n_cores):
+            recv = jax.lax.ppermute(send, axis_name, perm)
+            send = recv + jnp.take(partial, (idx - s - 1) % n_cores, axis=0)
+        return send        # after P-1 hops: my own block, fully reduced
+
+    def allgather(self, x, axis_name, n_cores):
+        if n_cores == 1:
+            return x[None]
+        idx = jax.lax.axis_index(axis_name)
+        perm = _right_perm(n_cores)
+        blocks = [x]                          # position k ← core idx-k
+        cur = x
+        for _ in range(1, n_cores):
+            cur = jax.lax.ppermute(cur, axis_name, perm)
+            blocks.append(cur)
+        stacked = jnp.stack(blocks)
+        order = (idx - jnp.arange(n_cores)) % n_cores
+        return jnp.take(stacked, order, axis=0)

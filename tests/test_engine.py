@@ -61,7 +61,11 @@ def test_supported_specs_lists_all_builtin_combos():
     ("coo+pipelined", "valid combinations"),     # known names, bad combo
     ("block+serial", "valid combinations"),
     ("ell+serial", "valid combinations"),
-    ("coo+serial+extra", "valid specs"),         # malformed spec string
+    # unknown topology must list the registered topology names — the same
+    # contract as unknown format/schedule
+    ("coo+serial+extra", "registered topologies"),
+    ("ell+pipelined+mobius", "registered topologies"),
+    ("coo+serial+hypercube+extra", "valid specs"),   # malformed spec string
     ("", "valid specs"),
 ])
 def test_invalid_specs_raise_listing_options(bad, needle):

@@ -1,0 +1,351 @@
+"""The topology axis of the Engine: spec grammar, registry contracts,
+full format×schedule×topology parity, and the end-to-end Trainer ride.
+
+Contracts:
+  * ``from_spec`` parses ``fmt+sched+topo``; two-part specs default the
+    topology to ``hypercube`` and round-trip through ``.spec`` UNCHANGED
+    (no legacy BENCH-key or checkpoint-spec churn);
+  * unknown topology names raise ``ValueError`` listing the registered
+    topology names (same contract as unknown format/schedule), and a
+    format's ``topologies`` restriction is enforced with the full
+    three-part spec list in the message;
+  * a fresh ``@register_topology`` registration is immediately reachable
+    through ``Engine``/``supported_topology_specs`` (the ~100-line
+    extension contract);
+  * EVERY registered format×schedule×topology combo matches the
+    ``coo+serial+allpairs`` dense-reference oracle to ≤1e-5 on 2 and 4
+    simulated devices — aggregate forward, gradient, and the 5-step
+    train-loss trajectory;
+  * the differentiable exchange primitives' custom_vjp mirrors hold: the
+    backward of ``reduce_scatter`` is the same topology's allgather and
+    vice versa, for every registered topology;
+  * ``Trainer(engine_spec="ell+pipelined+ring")`` trains end-to-end with
+    checkpoint/resume bit-exact.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar + defaults (the no-churn shim contract).
+# ---------------------------------------------------------------------------
+def test_two_part_specs_default_hypercube_and_roundtrip():
+    from repro.engine import EngineConfig
+
+    for spec in ("coo+serial", "block+pipelined", "ell+pipelined"):
+        cfg = EngineConfig.from_spec(spec)
+        assert cfg.topology == "hypercube"
+        assert cfg.spec == spec          # unchanged: no BENCH key churn
+    # bare format: both defaults kick in
+    cfg = EngineConfig.from_spec("ell")
+    assert (cfg.schedule, cfg.topology) == ("pipelined", "hypercube")
+    assert cfg.spec == "ell+pipelined"
+
+
+def test_three_part_specs_parse_and_roundtrip():
+    from repro.engine import Engine, EngineConfig
+
+    cfg = EngineConfig.from_spec("ell+pipelined+ring", lr=0.1)
+    assert (cfg.format, cfg.schedule, cfg.topology) == \
+        ("ell", "pipelined", "ring")
+    assert cfg.spec == "ell+pipelined+ring"
+    assert EngineConfig.from_spec(cfg.spec) == EngineConfig.from_spec(
+        "ell+pipelined+ring")
+    # an EXPLICIT default topology canonicalizes back to the two-part form
+    assert EngineConfig.from_spec("ell+pipelined+hypercube").spec == \
+        "ell+pipelined"
+    assert Engine("coo+serial+torus2d").spec == "coo+serial+torus2d"
+
+
+def test_registry_lists_builtin_topologies():
+    from repro.engine import (available_topologies, format_topologies,
+                              supported_specs, supported_topology_specs)
+
+    topos = available_topologies()
+    assert set(topos) >= {"hypercube", "allpairs", "ring", "torus2d"}
+    # two-part specs stay the canonical listing; the 3-part product is the
+    # full matrix (built-in formats ride every topology)
+    assert "ell+pipelined" in supported_specs()
+    assert "+hypercube" not in "".join(supported_specs())
+    full = supported_topology_specs()
+    assert "ell+pipelined+ring" in full and "coo+serial+torus2d" in full
+    assert len(full) == len(supported_specs()) * len(topos)
+    assert format_topologies("coo") == topos
+
+
+def test_unknown_topology_lists_registered_names():
+    from repro.engine import EngineConfig
+
+    with pytest.raises(ValueError, match="registered topologies"):
+        EngineConfig(format="coo", topology="mobius")
+    with pytest.raises(ValueError, match="registered topologies"):
+        EngineConfig.from_spec("ell+pipelined+mesh3d")
+
+
+def test_format_topology_restriction_enforced(rng):
+    """A format that restricts its topologies gets the same loud
+    ValueError contract as a bad schedule pair."""
+    from repro.engine import EngineConfig, register_format, \
+        supported_topology_specs
+    from repro.engine.formats import CooFormat
+    from repro.engine.registry import _FORMATS
+
+    @register_format("coo-hyperonly")
+    class CooHyperOnly(CooFormat):
+        topologies = ("hypercube",)
+
+    try:
+        assert "coo-hyperonly+serial+allpairs" not in \
+            supported_topology_specs()
+        assert "coo-hyperonly+serial+hypercube" in \
+            supported_topology_specs()
+        EngineConfig.from_spec("coo-hyperonly+serial")          # default ok
+        with pytest.raises(ValueError, match="does not support topology"):
+            EngineConfig.from_spec("coo-hyperonly+serial+ring")
+    finally:
+        _FORMATS.pop("coo-hyperonly", None)
+
+
+def test_register_new_topology_is_reachable(rng):
+    """The extension contract: a fresh @register_topology subclass is
+    immediately usable through Engine specs with no other code change."""
+    import jax.numpy as jnp
+    from repro.engine import (Engine, available_topologies,
+                              register_topology, supported_topology_specs)
+    from repro.engine.registry import _TOPOLOGIES
+    from repro.graph.coo import from_edges
+    from repro.topology import HypercubeTopology
+
+    @register_topology("hypercube-twin")
+    class HypercubeTwin(HypercubeTopology):
+        """Same wires as hypercube — registered under a new name."""
+
+    try:
+        assert "hypercube-twin" in available_topologies()
+        assert "ell+pipelined+hypercube-twin" in supported_topology_specs()
+        coo = from_edges(rng.integers(0, 32, 300),
+                         rng.integers(0, 64, 300),
+                         rng.standard_normal(300).astype(np.float32),
+                         32, 64)
+        x = jnp.asarray(rng.standard_normal((coo.n_src, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+        # single-device layer ignores the wires but must resolve the name
+        y = Engine("coo+serial+hypercube-twin").layer(coo, x, w)
+        y_ref = Engine("coo+serial").layer(coo, x, w)
+        assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    finally:
+        _TOPOLOGIES.pop("hypercube-twin", None)
+
+
+# ---------------------------------------------------------------------------
+# Exchange plans (the cost model the benchmarks record).
+# ---------------------------------------------------------------------------
+def test_exchange_plans_steps_and_bytes():
+    from repro.engine import get_topology
+
+    P, rows, d = 8, 256, 32
+    expected_steps = {"hypercube": 3, "torus2d": 3,
+                      "ring": 7, "allpairs": 7}
+    for name, steps in expected_steps.items():
+        plan = get_topology(name).plan(rows, d, P)
+        assert plan.steps == steps, name
+        # every built-in ships exactly the owed blocks: n_rows·(1 − 1/P)
+        assert plan.bytes_per_core == rows * (P - 1) // P * d * 4, name
+    # ring/allpairs move one n/P block per step; the hypercube front-loads
+    # half, the torus splits that across two disjoint link classes
+    assert get_topology("ring").plan(rows, d, P).max_step_rows == rows // P
+    assert get_topology("hypercube").plan(rows, d, P).max_step_rows \
+        == rows // 2
+    assert get_topology("torus2d").plan(rows, d, P).max_step_rows \
+        == rows // 4
+
+
+def test_topology_validates_core_count():
+    from repro.engine import Engine, get_topology
+    from repro.launch.mesh import make_topology_mesh
+
+    with pytest.raises(ValueError, match="power-of-two"):
+        get_topology("ring").validate_cores(3)
+    with pytest.raises(ValueError, match="power-of-two"):
+        Engine("ell+pipelined+ring").build(n_cores=6)
+    with pytest.raises(ValueError, match="power-of-two"):
+        make_topology_mesh(5, "torus2d")
+    with pytest.raises(ValueError, match="registered topologies"):
+        make_topology_mesh(4, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Parity: EVERY format×schedule×topology combo vs the coo+serial+allpairs
+# dense-reference oracle — aggregate fwd, grad, 5-step train trajectory.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_every_topology_combo_matches_allpairs_oracle(n_devices):
+    run_subprocess(textwrap.dedent(f"""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.distributed.gcn_train import init_params
+        from repro.engine import (Engine, EngineConfig,
+                                  supported_topology_specs)
+        from repro.graph.coo import from_edges
+
+        PC = {n_devices}
+        n_dst, n_src, d, e = 16 * PC, 32 * PC, 20, 2000
+        rng = np.random.default_rng(0)
+        coo = from_edges(rng.integers(0, n_dst, e),
+                         rng.integers(0, n_src, e),
+                         rng.standard_normal(e).astype(np.float32),
+                         n_dst, n_src)
+        x = jnp.asarray(rng.standard_normal((n_src, d)), jnp.float32)
+        mesh = jax.make_mesh((PC,), ('model',))
+        specs = supported_topology_specs()
+        assert len(specs) >= 12, specs
+
+        # the dense all-to-all reference is the oracle of this sweep
+        oracle = Engine('coo+serial+allpairs').build(mesh, graph=coo)
+        ref = np.asarray(oracle.aggregate(x))
+        np.testing.assert_allclose(ref, np.asarray(coo.matmul(x)),
+                                   rtol=2e-4, atol=2e-4)
+        g_ref = np.asarray(jax.grad(
+            lambda xx: jnp.sum(coo.matmul(xx) ** 2))(x))
+        for spec in specs:
+            b = Engine(spec).build(mesh, graph=coo)
+            y = np.asarray(b.aggregate(x))
+            err = np.abs(y - ref).max()
+            assert err <= 1e-5, (spec, err)
+            g = np.asarray(jax.grad(
+                lambda xx: jnp.sum(b.aggregator()(xx) ** 2))(x))
+            np.testing.assert_allclose(g, g_ref, rtol=2e-3, atol=2e-3,
+                                       err_msg=spec)
+
+        # 5-step train trajectories: every combo within 1e-5 of the oracle
+        n_mid = 8 * PC
+        class _MB:
+            layers = [from_edges(rng.integers(0, n_mid, 300),
+                                 rng.integers(0, n_src, 300),
+                                 np.abs(rng.standard_normal(300)
+                                        ).astype(np.float32) + 0.1,
+                                 n_mid, n_src)]
+        feats = rng.standard_normal((n_src, 8)).astype(np.float32)
+        labels = rng.integers(0, 4, n_mid).astype(np.int32)
+        params0 = init_params(jax.random.PRNGKey(0), [(8, 4)])
+        losses = {{}}
+        for spec in ['coo+serial+allpairs'] + specs:
+            bundle = Engine(EngineConfig.from_spec(spec,
+                                                   lr=0.3)).build(mesh)
+            bb = bundle.shard_batch(_MB(), feats, labels)
+            p, traj = params0, []
+            for _ in range(5):
+                p, loss = bundle.train_step(p, bb)
+                traj.append(float(loss))
+            losses[spec] = traj
+        ref_traj = losses['coo+serial+allpairs']
+        for spec, traj in losses.items():
+            for i, (a, b_) in enumerate(zip(ref_traj, traj)):
+                assert abs(a - b_) <= 1e-5, (spec, i, a, b_)
+        print('OK', len(specs), 'combos')
+    """), n_devices=n_devices)
+
+
+def test_exchange_primitives_custom_vjp_mirrors():
+    """grad through base.reduce_scatter == the topology's allgather of the
+    upstream cotangent (and vice versa), for every registered topology —
+    the transpose-free backward rides any interconnect."""
+    run_subprocess(textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.engine import available_topologies, get_topology
+        from repro.topology import allgather, exchange, reduce_scatter
+
+        PC, t, d = 4, 6, 10
+        rng = np.random.default_rng(0)
+        mesh = Mesh(np.array(jax.devices()), ('model',))
+        part = jnp.asarray(rng.standard_normal((PC, PC, t, d)), jnp.float32)
+        ct = jnp.asarray(rng.standard_normal((PC, t, d)), jnp.float32)
+        for name in available_topologies():
+            topo = get_topology(name)
+            plan = topo.plan(PC * t, d, PC)
+
+            # reduce_scatter vjp == allgather of the cotangent
+            def rs_loss(p):
+                y = reduce_scatter(name, 'model', PC, p[0])
+                return jnp.sum(y * ct[jax.lax.axis_index('model')]), y
+
+            g = shard_map(lambda p: jax.grad(
+                              lambda q: rs_loss(q)[0])(p),
+                          mesh=mesh, in_specs=(P('model'),),
+                          out_specs=P('model'))(part)
+            want = shard_map(
+                lambda c: topo.allgather(c[0], 'model', PC)[None],
+                mesh=mesh, in_specs=(P('model'),),
+                out_specs=P('model'))(ct)
+            np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f'{name} rs-vjp')
+
+            # allgather vjp == reduce_scatter of the cotangent blocks
+            ct_full = jnp.asarray(
+                rng.standard_normal((PC, PC, t, d)), jnp.float32)
+            g2 = shard_map(
+                lambda x, c: jax.grad(lambda q: jnp.sum(
+                    allgather(name, 'model', PC, q[0]) * c[0]))(x),
+                mesh=mesh, in_specs=(P('model'), P('model')),
+                out_specs=P('model'))(ct, ct_full)
+            want2 = shard_map(
+                lambda c: topo.reduce_scatter(c[0], 'model', PC)[None],
+                mesh=mesh, in_specs=(P('model'),),
+                out_specs=P('model'))(ct_full)
+            np.testing.assert_allclose(np.asarray(g2), np.asarray(want2),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f'{name} ag-vjp')
+
+            # exchange() is the plan-driven spelling of the same primitives
+            y1 = shard_map(
+                lambda p: exchange(p[0], plan)[None], mesh=mesh,
+                in_specs=(P('model'),), out_specs=P('model'))(part)
+            y2 = shard_map(
+                lambda p: topo.reduce_scatter(p[0], 'model', PC)[None],
+                mesh=mesh, in_specs=(P('model'),),
+                out_specs=P('model'))(part)
+            assert np.array_equal(np.asarray(y1), np.asarray(y2)), name
+        print('OK')
+    """), n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# End to end: the Trainer rides a non-default topology, ckpt/resume exact.
+# ---------------------------------------------------------------------------
+def test_trainer_rides_ring_topology_ckpt_resume_bit_exact():
+    run_subprocess(textwrap.dedent("""
+        import tempfile
+        import numpy as np
+        from repro.launch.trainer import Trainer
+
+        def build(ckpt):
+            return Trainer('ell+pipelined+ring', 'flickr', n_cores=2,
+                           scale=0.005, feat_dim=16, hidden=16,
+                           batch_size=16, lr=0.1, seed=0,
+                           pad_multiple=32, val_batches=1,
+                           ckpt_dir=ckpt, ckpt_every=0)
+
+        STEPS, MID = 6, 3
+        with tempfile.TemporaryDirectory() as ckpt:
+            full = build(None)
+            assert full.engine.spec == 'ell+pipelined+ring'
+            assert full.bundle.topology.name == 'ring'
+            ref = full.fit(1, steps_per_epoch=STEPS)
+            part = build(ckpt)
+            part.train_steps(MID)
+            part.save(sync=True)
+            part.close()
+            resumed = build(ckpt)
+            out = resumed.fit(1, steps_per_epoch=STEPS - MID, resume=True)
+        drift = max(abs(a - b) for a, b in
+                    zip(ref['loss_history'][MID:], out['loss_history']))
+        assert drift == 0.0, drift
+        assert out['val_acc'], 'no validation ran'
+        print('OK ring trainer, drift', drift)
+    """), n_devices=2)
