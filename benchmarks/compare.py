@@ -38,6 +38,9 @@ TRACKED: Dict[str, str] = {
     # aggregation hot path (paired median — load-robust); the topology
     # smoke gates it > 1, this tracks that it doesn't erode
     "topology.hypercube_vs_allpairs_speedup": "higher",
+    # Engine('auto') vs the best manual arm (paired median); the smoke
+    # gates it >= 0.9, this tracks that the planner's pick doesn't erode
+    "auto.auto_vs_best_manual_speedup": "higher",
 }
 
 

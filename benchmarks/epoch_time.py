@@ -36,6 +36,15 @@ time, and the paired-median aggregate-op speedup vs the dense ``allpairs``
 reference; results land in ``BENCH_topology.json``.  ``run --smoke`` gates
 ``hypercube_vs_allpairs_speedup > 1`` at 4 cores — the structured NoC must
 beat the dense crossbar reference, or the headline topology claim is dead.
+
+``--auto`` exercises the profile-guided planner end to end: autotune every
+candidate spec on one synthetic stream (compile-and-replay, same
+paired-median child-re-exec methodology), persist the winner to
+``BENCH_planner.json``, then race a fresh ``Engine("auto")`` — which must
+resolve through that record — against the best manual arm.  Results land
+in ``BENCH_auto.json``; ``run --smoke`` gates
+``auto_vs_best_manual_speedup >= 0.9`` plus exact loss bit-match and
+winner/resolution agreement.
 """
 from __future__ import annotations
 
@@ -434,7 +443,7 @@ def measured_topologies(n_cores: int = 4, base_spec: str = "ell+pipelined",
     ``Topology.plan`` so the cost table never drifts from the code.
     """
     from repro.distributed.gcn_train import init_params
-    from repro.engine import Engine, EngineConfig, available_topologies
+    from repro.engine import Engine, EngineConfig, supported_specs
     from repro.engine.registry import get_topology
 
     if len(jax.devices()) < n_cores:
@@ -442,10 +451,16 @@ def measured_topologies(n_cores: int = 4, base_spec: str = "ell+pipelined",
             f"need {n_cores} devices, have {len(jax.devices())} — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count")
     base = EngineConfig.from_spec(base_spec)
-    topologies = available_topologies()
+    # the canonical three-part enumeration (respects the base format's
+    # topology restrictions) — not a hand-built registry product
+    prefix = f"{base.format}+{base.schedule}+"
+    topologies = sorted(s[len(prefix):]
+                        for s in supported_specs(three_part=True)
+                        if s.startswith(prefix))
     mesh = jax.make_mesh((n_cores,), ("model",))
     layers = _synthetic_layers(batch, mid, frontier, deg, seed)
-    out: Dict = {"n_cores": n_cores, "base_spec": f"{base.format}+"
+    out: Dict = {"n_cores": n_cores, "backend": jax.default_backend(),
+                 "base_spec": f"{base.format}+"
                  f"{base.schedule}", "batch": batch, "mid": mid,
                  "frontier": frontier, "feat": feat, "hidden": hidden,
                  "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
@@ -456,6 +471,7 @@ def measured_topologies(n_cores: int = 4, base_spec: str = "ell+pipelined",
         out[f"exchange_steps_{topo}"] = plan.steps
         out[f"exchange_bytes_per_core_{topo}"] = plan.bytes_per_core
         out[f"max_step_rows_{topo}"] = plan.max_step_rows
+        out[f"link_parallelism_{topo}"] = plan.link_parallelism
         bundle = Engine(EngineConfig(format=base.format,
                                      schedule=base.schedule,
                                      topology=topo, lr=0.05)).build(mesh)
@@ -501,6 +517,21 @@ def measured_topologies(n_cores: int = 4, base_spec: str = "ell+pipelined",
     # NoC vs the dense crossbar reference, on the aggregation hot path
     out["hypercube_vs_allpairs_speedup"] = \
         out["agg_fwdbwd_speedup_vs_allpairs_hypercube"]
+    # fit the planner's α·steps + β·bytes cost model against THESE
+    # measurements and record each topology's prediction next to its
+    # measured time, so the fit error is visible in the record itself
+    from repro.engine import planner
+    model = planner.fit_cost_model(record=out)
+    if model is not None:
+        out["cost_model"] = {"alpha": model.alpha, "beta": model.beta,
+                             "const": model.const}
+        for topo in topologies:
+            plan = get_topology(topo).plan(mid, feat, n_cores,
+                                           cost_model=model)
+            out[f"predicted_s_per_step_{topo}"] = plan.predicted_seconds
+            meas = out[f"s_per_step_{topo}"]
+            out[f"predicted_rel_err_{topo}"] = \
+                abs(plan.predicted_seconds - meas) / max(meas, 1e-12)
     return out
 
 
@@ -590,12 +621,15 @@ def run_topology_arm(n_cores: int = 4, *, smoke: bool = False,
         json.dump(rec, f, indent=1)
     print(f"## topology sweep ({n_cores} simulated cores, "
           f"{rec['base_spec']}+<topology>): one bit-matching stream")
-    print("topology,steps,bytes/core,max_step_rows,s_per_step")
+    print("topology,steps,bytes/core,max_step_rows,s_per_step,"
+          "predicted_s_per_step")
     for topo in rec["topologies"]:
+        pred = rec.get(f"predicted_s_per_step_{topo}")
         print(f"{topo},{rec[f'exchange_steps_{topo}']},"
               f"{rec[f'exchange_bytes_per_core_{topo}']},"
               f"{rec[f'max_step_rows_{topo}']},"
-              f"{rec[f's_per_step_{topo}']:.4f}")
+              f"{rec[f's_per_step_{topo}']:.4f},"
+              + ("-" if pred is None else f"{pred:.4f}"))
     for topo in rec["topologies"]:
         if topo == "allpairs":
             continue
@@ -607,6 +641,129 @@ def run_topology_arm(n_cores: int = 4, *, smoke: bool = False,
     print(f"# loss_match(<=1e-5 across topologies)={rec['loss_match']}  "
           f"hypercube_vs_allpairs={rec['hypercube_vs_allpairs_speedup']:.3f}x")
     print(f"# (wrote {out_path})")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# --auto: the planner's Engine("auto") arm vs the best measured manual arm.
+# ---------------------------------------------------------------------------
+def measured_auto(n_cores: int = 4, batch: int = 256, mid: int = 512,
+                  frontier: int = 1024, feat: int = 128, hidden: int = 128,
+                  deg: int = 8, n_steps: int = 3, n_trials: int = 8,
+                  seed: int = 0) -> Dict:
+    """``Engine("auto")`` end-to-end: autotune every candidate spec on one
+    synthetic stream, persist the winner to ``BENCH_planner.json``, then
+    race a fresh ``Engine("auto")`` bundle (which must resolve through the
+    persisted record) against the best manual arm, paired per trial.
+
+    The auto bundle rides the SAME resolved spec as the winner, so its
+    losses must bit-match the manual arm's and the paired-median ratio
+    must sit near 1.0 — ``run.py --smoke`` gates
+    ``auto_vs_best_manual_speedup >= 0.9`` (auto never loses the planner's
+    own pick by >10%) plus ``auto_loss_match`` and
+    ``resolved_matches_winner``.
+    """
+    from repro.distributed.gcn_train import init_params
+    from repro.engine import Engine, EngineConfig, planner
+
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    stats = planner.GraphStats(n_dst=mid, n_src=frontier,
+                               avg_deg=float(deg), feat_dim=feat)
+    entry = planner.autotune(stats, n_cores=n_cores, n_steps=n_steps,
+                             n_trials=n_trials, seed=seed, force=True)
+    resolved = planner.resolve_spec(n_cores=n_cores, graph_stats=stats)
+
+    def canon(s):
+        return EngineConfig.from_spec(s).spec
+
+    out: Dict = {"n_cores": n_cores, "backend": jax.default_backend(),
+                 "bucket": entry["bucket"], "batch": batch, "mid": mid,
+                 "frontier": frontier, "feat": feat, "hidden": hidden,
+                 "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
+                 "best_manual_spec": canon(entry["spec"]),
+                 "resolved_spec": canon(resolved),
+                 "resolved_matches_winner":
+                     canon(resolved) == canon(entry["spec"]),
+                 "autotune_s_per_step": entry["s_per_step"]}
+    mesh = jax.make_mesh((n_cores,), ("model",))
+    layers = _synthetic_layers(batch, mid, frontier, deg, seed)
+    runs = {}
+    for name, spec in (("manual", entry["spec"]), ("auto", "auto")):
+        bundle = Engine(EngineConfig.from_spec(spec, lr=0.05)).build(mesh)
+        b = _synthetic_sharded_batch(bundle, batch, frontier, feat,
+                                     layers=layers, seed=seed)
+        params = init_params(jax.random.PRNGKey(seed),
+                             [(feat, hidden), (hidden, 16)])
+        step = bundle.train_step_fn(b["dims"])
+        params, loss = step(params, b)        # compile; loss at init params
+        first = float(loss)
+        params, loss = step(params, b)        # warmup
+        jax.block_until_ready(loss)
+        runs[name] = {"step": step, "batch": b, "params": params,
+                      "loss": first, "times": [], "spec": bundle.spec}
+    out["auto_built_spec"] = runs["auto"]["spec"]
+    for _ in range(n_trials):
+        for arm in runs.values():     # back-to-back: load is common-mode
+            t0 = time.perf_counter()
+            params, loss = arm["params"], None
+            for _ in range(n_steps):
+                params, loss = arm["step"](params, arm["batch"])
+            jax.block_until_ready(loss)
+            arm["times"].append((time.perf_counter() - t0) / n_steps)
+    ratios = sorted(m / a for m, a in zip(runs["manual"]["times"],
+                                          runs["auto"]["times"]))
+    out["s_per_step_manual"] = min(runs["manual"]["times"])
+    out["s_per_step_auto"] = min(runs["auto"]["times"])
+    out["auto_vs_best_manual_speedup"] = ratios[len(ratios) // 2]
+    # same resolved spec on the same stream: losses must be bit-equal
+    out["auto_loss_match"] = runs["auto"]["loss"] == runs["manual"]["loss"]
+    return out
+
+
+def run_auto_arm(n_cores: int = 4, *, smoke: bool = False,
+                 out_path: str = "BENCH_auto.json") -> Dict:
+    """Re-exec the auto-arm measurement under a forced multi-device
+    backend and write ``out_path`` (``BENCH_planner.json`` lands in the
+    CWD as a side effect — the persisted autotune winner)."""
+    kwargs: Dict = {"n_cores": n_cores}
+    if smoke:
+        kwargs.update(batch=128, mid=256, frontier=512, feat=64, hidden=64,
+                      deg=8, n_steps=3, n_trials=4)
+    child = (
+        "import json, sys; sys.path.insert(0, '.');"
+        "from benchmarks.epoch_time import measured_auto;"
+        f"print(json.dumps(measured_auto(**{kwargs!r})))"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_cores} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"auto arm failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"## auto arm ({n_cores} simulated cores): Engine('auto') vs the "
+          "best manual spec")
+    print("spec,s_per_step (autotune medians)")
+    for spec, s in sorted(rec["autotune_s_per_step"].items(),
+                          key=lambda kv: kv[1]):
+        print(f"{spec},{s:.4f}")
+    print(f"# winner={rec['best_manual_spec']}  "
+          f"resolved={rec['resolved_spec']}  "
+          f"matches={rec['resolved_matches_winner']}")
+    print(f"# auto vs best manual: "
+          f"{rec['auto_vs_best_manual_speedup']:.3f}x (paired median, "
+          f"gate >= 0.9)  loss bit-match={rec['auto_loss_match']}")
+    print(f"# (wrote {out_path}; planner record in BENCH_planner.json)")
     return rec
 
 
@@ -737,6 +894,11 @@ def main() -> None:
                          "one bit-matching stream (exchange steps + bytes "
                          "+ measured speedups vs the allpairs reference; "
                          "writes BENCH_topology.json)")
+    ap.add_argument("--auto", action="store_true",
+                    help="autotune every spec, persist the winner to "
+                         "BENCH_planner.json, and race Engine('auto') "
+                         "against the best manual arm (writes "
+                         "BENCH_auto.json)")
     args = ap.parse_args()
 
     ran = False
@@ -747,6 +909,10 @@ def main() -> None:
     if args.topologies:
         run_topology_arm(min(args.cores, 4) if args.smoke else args.cores,
                          smoke=args.smoke, base_spec=args.spec)
+        ran = True
+    if args.auto:
+        run_auto_arm(min(args.cores, 4) if args.smoke else args.cores,
+                     smoke=args.smoke)
         ran = True
     if args.input_pipeline is not None:
         modes = ("sync", "prefetch") if args.input_pipeline == "both" \

@@ -7,12 +7,16 @@
 ``BENCH_autotune.json``), exercises the overlap + pre-reduced-ELL
 aggregation arms at toy sizes (4 simulated cores), sweeps every registered
 interconnect topology on one bit-matching stream (``BENCH_topology.json``),
-sanity-runs the block-layout and ELL SpMM kernels against their oracle,
-diffs the fresh record against the previous ``BENCH_smoke.json``
-(warn-only), and writes ``BENCH_smoke.json`` + ``BENCH_overlap.json`` for
-the workflow to upload as artifacts.  The smoke FAILS if the ELL arm's
-aggregation speedups drop to ≤1.0 or the hypercube NoC stops beating the
-dense all-pairs reference — no regression arm ships.
+runs the planner's auto arm — spec autotune persisted to
+``BENCH_planner.json``, then ``Engine("auto")`` raced against the best
+manual spec (``BENCH_auto.json``) — sanity-runs the block-layout and ELL
+SpMM kernels against their oracle, diffs the fresh record against the
+previous ``BENCH_smoke.json`` (warn-only), and writes ``BENCH_smoke.json``
++ ``BENCH_overlap.json`` for the workflow to upload as artifacts.  The
+smoke FAILS if the ELL arm's aggregation speedups drop to ≤1.0, the
+hypercube NoC stops beating the dense all-pairs reference, or the auto
+spec loses to the best manual arm by >10% (or stops bit-matching it) —
+no regression arm ships.
 """
 from __future__ import annotations
 
@@ -46,13 +50,17 @@ def smoke() -> int:
 
     print(f"\n{'=' * 72}\nengine arms — coo+serial oracle vs "
           f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
-    from benchmarks.epoch_time import (run_input_pipeline_arm,
+    from benchmarks.epoch_time import (run_auto_arm, run_input_pipeline_arm,
                                        run_overlap_arm, run_topology_arm)
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\ntopology sweep — every registered interconnect "
           f"vs the allpairs reference (toy)\n{'=' * 72}")
     rec["topology"] = run_topology_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\nauto arm — planner autotune + Engine('auto') vs "
+          f"the best manual spec (toy)\n{'=' * 72}")
+    rec["auto"] = run_auto_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\ninput pipeline — Trainer host-stall/step, "
           f"sync vs prefetch (toy)\n{'=' * 72}")
@@ -107,6 +115,7 @@ def smoke() -> int:
     ov = rec["overlap"]
     ip = rec["input_pipeline"]
     tp = rec["topology"]
+    au = rec["auto"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -126,7 +135,13 @@ def smoke() -> int:
           # STRICTLY reduces per-step host stall vs the sync pipeline on
           # an identical (bit-matching) batch stream
           and ip["prefetch_reduces_stall"]
-          and ip["input_loss_match"])
+          and ip["input_loss_match"]
+          # the planner gate: Engine('auto') must follow its own persisted
+          # autotune winner, bit-match its losses, and never lose to the
+          # best manual arm by >10% (paired median on a common-mode load)
+          and au["auto_vs_best_manual_speedup"] >= 0.9
+          and au["auto_loss_match"]
+          and au["resolved_matches_winner"])
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

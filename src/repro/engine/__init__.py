@@ -1,10 +1,13 @@
 # The declarative Engine API — the single entry point to every aggregation
 # path (format x schedule x topology), with a pluggable registry for new
-# formats, schedules and interconnect topologies.
-# See README "Engine API" / "Topology" for the spec grammar and guides.
+# formats, schedules and interconnect topologies, plus the profile-guided
+# planner behind the "auto" spec (repro.engine.planner — imported lazily
+# by Engine.resolve, never at package import).
+# See README "Engine API" / "Topology" / "Auto spec" for the grammar.
 from .config import EngineConfig
 from .engine import Engine, EngineBundle
-from .registry import (Format, Schedule, available_formats,
+from .plans import RecordStore
+from .registry import (AUTO_SPEC, Format, Schedule, available_formats,
                        available_schedules, available_topologies,
                        format_topologies, get_format, get_schedule,
                        get_topology, register_format, register_schedule,
@@ -13,7 +16,7 @@ from .registry import (Format, Schedule, available_formats,
 from . import formats  # noqa: F401  (registers the built-in formats)
 
 __all__ = [
-    "Engine", "EngineBundle", "EngineConfig",
+    "Engine", "EngineBundle", "EngineConfig", "RecordStore", "AUTO_SPEC",
     "Format", "Schedule", "register_format", "register_schedule",
     "register_topology", "get_format", "get_schedule", "get_topology",
     "available_formats", "available_schedules", "available_topologies",

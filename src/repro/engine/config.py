@@ -14,6 +14,13 @@ the format's default; an omitted topology takes ``hypercube`` (the
 paper's NoC).  ``.spec`` is the canonical spelling and keeps the legacy
 two-part form whenever the topology is the default, so pre-topology spec
 strings, metric keys and checkpoints round-trip unchanged.
+
+``"auto"`` is the one spec that is not a format name: it defers the
+format/schedule/topology choice to :mod:`repro.engine.planner`, which
+resolves it to a concrete registered spec at build time (cost model →
+persisted autotune record → static fallback).  An auto config carries the
+shared knobs but no concrete parts; combining it with an explicit
+schedule or topology is an error.
 """
 from __future__ import annotations
 
@@ -61,12 +68,24 @@ class EngineConfig:
     precision: str = "fp32"
 
     def __post_init__(self):
-        fmt = registry.get_format(self.format)
-        if self.schedule is None:
-            object.__setattr__(self, "schedule", fmt.default_schedule)
-        if self.topology is None:
-            object.__setattr__(self, "topology", registry.DEFAULT_TOPOLOGY)
-        registry.validate_combo(self.format, self.schedule, self.topology)
+        if self.format == registry.AUTO_SPEC:
+            if self.schedule is not None or self.topology is not None:
+                raise ValueError(
+                    f"{registry.AUTO_SPEC!r} is a complete spec — the "
+                    f"planner picks the format, schedule AND topology; "
+                    f"drop the explicit "
+                    f"{'schedule' if self.schedule else 'topology'} or name "
+                    f"a concrete spec from "
+                    f"{registry.supported_specs(three_part=True)}")
+        else:
+            fmt = registry.get_format(self.format)
+            if self.schedule is None:
+                object.__setattr__(self, "schedule", fmt.default_schedule)
+            if self.topology is None:
+                object.__setattr__(self, "topology",
+                                   registry.DEFAULT_TOPOLOGY)
+            registry.validate_combo(self.format, self.schedule,
+                                    self.topology)
         if self.n_chunks is not None and int(self.n_chunks) < 1:
             raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
         if self.block_tiles < 1:
@@ -104,14 +123,31 @@ class EngineConfig:
         return cls(**kw)
 
     @property
+    def is_auto(self) -> bool:
+        """True for the planner-deferred ``"auto"`` spec (no concrete
+        format/schedule/topology until :meth:`Engine.resolve` runs)."""
+        return self.format == registry.AUTO_SPEC
+
+    @property
     def spec(self) -> str:
         """The canonical spec string of this config.
 
         Two-part ``"format+schedule"`` when the topology is the default
         ``hypercube`` (pre-topology specs, metric keys and checkpoints
-        round-trip unchanged); ``"format+schedule+topology"`` otherwise.
+        round-trip unchanged); ``"format+schedule+topology"`` otherwise;
+        ``"auto"`` for the planner-deferred config.
         """
+        if self.is_auto:
+            return registry.AUTO_SPEC
         base = f"{self.format}+{self.schedule}"
         if self.topology == registry.DEFAULT_TOPOLOGY:
             return base
         return f"{base}+{self.topology}"
+
+    def with_spec(self, spec: str) -> "EngineConfig":
+        """This config's knobs (waves, caps, axis, lr, ...) re-bound to a
+        different spec — how the planner turns an auto config concrete."""
+        return EngineConfig.from_spec(
+            spec, n_chunks=self.n_chunks, caps=self.caps,
+            block_tiles=self.block_tiles, axis=self.axis, lr=self.lr,
+            precision=self.precision)

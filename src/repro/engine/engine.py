@@ -19,6 +19,13 @@ specs from the batch pytree itself so any format's leaf structure works.
 Single-device use needs no mesh: ``eng.layer(coo, x, w)`` runs the
 format's GCN layer (layout built and cached per graph) with its
 transpose-free backward.
+
+``Engine("auto")`` defers the triple to :mod:`repro.engine.planner`:
+:meth:`Engine.resolve` turns it into a concrete engine for a core count
+(persisted autotune winner → fitted cost model → static fallback — pure
+reads, no implicit sweep), and :meth:`Engine.build` resolves
+automatically from the mesh's core count.  Resolution is cached per
+(core count, stats bucket) so one auto engine resolves once.
 """
 from __future__ import annotations
 
@@ -52,18 +59,59 @@ class Engine:
         if isinstance(config, str):
             config = EngineConfig.from_spec(config)
         self.config: EngineConfig = config
-        self.format: Format = get_format(config.format)
-        self.schedule: Schedule = get_schedule(config.schedule)
-        self.topology = get_topology(config.topology)
+        if config.is_auto:
+            # deferred: the planner picks the triple at resolve/build time
+            self.format = self.schedule = self.topology = None
+            self._resolved: Dict[tuple, "Engine"] = {}
+        else:
+            self.format: Format = get_format(config.format)
+            self.schedule: Schedule = get_schedule(config.schedule)
+            self.topology = get_topology(config.topology)
 
     @property
     def spec(self) -> str:
         return self.config.spec
 
+    @property
+    def is_auto(self) -> bool:
+        return self.config.is_auto
+
+    @classmethod
+    def available_specs(cls, *, three_part: bool = False) -> list:
+        """Every spec ``Engine(...)`` accepts (the registry's canonical
+        enumeration): two-part spellings plus ``"auto"`` by default, the
+        concrete three-part product with ``three_part=True``."""
+        from .registry import supported_specs
+        return supported_specs(three_part=three_part)
+
+    def resolve(self, n_cores: int, graph_stats=None) -> "Engine":
+        """This engine with ``"auto"`` made concrete for ``n_cores``.
+
+        Concrete engines return themselves; an auto engine asks the
+        planner (:func:`repro.engine.planner.resolve_spec` — persisted
+        winner → cost model → static fallback, never a sweep) and caches
+        the result per (core count, stats bucket), carrying every knob of
+        this config onto the resolved spec.
+        """
+        if not self.is_auto:
+            return self
+        from . import planner
+        key = (int(n_cores),
+               graph_stats.bucket() if graph_stats is not None else None)
+        eng = self._resolved.get(key)
+        if eng is None:
+            spec = planner.resolve_spec(n_cores=int(n_cores),
+                                        graph_stats=graph_stats)
+            eng = Engine(self.config.with_spec(spec))
+            self._resolved[key] = eng
+        return eng
+
     # -- single-device layer ------------------------------------------------
     def layout(self, graph):
         """This format's single-device layout for ``graph`` (cached per COO
         identity when the graph is concrete; tracers build uncached)."""
+        if self.is_auto:              # single-device: resolve at P=1
+            return self.resolve(1).layout(graph)
         build = lambda: self.format.build_local(graph, self.config)  # noqa: E731
         if isinstance(graph.rows, jax.core.Tracer):
             if not self.format.traceable:
@@ -87,6 +135,9 @@ class Engine:
               order: str = "coag", activate: bool = True) -> jnp.ndarray:
         """Single-device GCN layer through this engine's format: layout
         build (cached), forward kernel, transpose-free backward."""
+        if self.is_auto:
+            return self.resolve(1).layer(graph, x, w, order=order,
+                                         activate=activate)
         return self.format.layer(self.layout(graph), x, w, order=order,
                                  activate=activate)
 
@@ -103,6 +154,9 @@ class Engine:
             if mesh is None:
                 raise ValueError("Engine.build needs a mesh or n_cores")
             n_cores = int(mesh.shape[self.config.axis])
+        if self.is_auto:
+            return self.resolve(n_cores).build(mesh, graph=graph,
+                                               n_cores=n_cores)
         # the topology owns the core-count contract (every built-in needs a
         # power-of-two count — the block partitioning does too)
         self.topology.validate_cores(n_cores)
@@ -134,6 +188,12 @@ class EngineBundle:
         self.n_chunks = self.schedule.resolve_n_chunks(self.config.n_chunks)
         self._steps: Dict[Dims, Any] = {}
         self._forwards: Dict[Dims, Any] = {}
+
+    @property
+    def spec(self) -> str:
+        """The CONCRETE spec this bundle compiled (auto is resolved by
+        build time — a bundle never carries ``"auto"``)."""
+        return self.config.spec
 
     # -- host-side batch prep ------------------------------------------------
     def prepare_batch(self, mb, features: np.ndarray, labels: np.ndarray

@@ -131,6 +131,10 @@ _TOPOLOGIES: Dict = {}      # name -> repro.topology.Topology instance
 #: the schedule whose fp32 add order is the repo-wide oracle contract
 DEFAULT_TOPOLOGY = "hypercube"
 
+#: the profile-guided spec: ``Engine("auto")`` resolves to a concrete
+#: format+schedule+topology via :mod:`repro.engine.planner` before build
+AUTO_SPEC = "auto"
+
 
 def _options(plural: str, table: Dict) -> str:
     return f"registered {plural}: {sorted(table)}"
@@ -181,7 +185,8 @@ def get_format(name: str) -> Format:
         return _FORMATS[name]
     except KeyError:
         raise ValueError(f"unknown format {name!r}; "
-                         + _options("formats", _FORMATS)) from None
+                         + _options("formats", _FORMATS)
+                         + f" (or the {AUTO_SPEC!r} spec)") from None
 
 
 def get_schedule(name: str) -> Schedule:
@@ -198,7 +203,8 @@ def get_topology(name: str):
         return _TOPOLOGIES[name]
     except KeyError:
         raise ValueError(f"unknown topology {name!r}; "
-                         + _options("topologies", _TOPOLOGIES)) from None
+                         + _options("topologies", _TOPOLOGIES)
+                         + f" (or the {AUTO_SPEC!r} spec)") from None
 
 
 def available_formats() -> List[str]:
@@ -222,22 +228,30 @@ def format_topologies(fmt: str) -> List[str]:
     return sorted(f.topologies)
 
 
-def supported_specs() -> List[str]:
-    """Every valid ``"format+schedule"`` combination, sorted.
+def supported_specs(*, three_part: bool = False) -> List[str]:
+    """Every valid spec spelling, sorted.
 
-    Two-part specs are the CANONICAL spellings (topology defaults to
-    ``hypercube``) — benchmark metric keys and saved-spec round-trips are
-    keyed on them; :func:`supported_topology_specs` enumerates the full
-    three-axis product.
+    Default (``three_part=False``): the canonical two-part
+    ``"format+schedule"`` spellings (topology defaults to ``hypercube``) —
+    benchmark metric keys and saved-spec round-trips are keyed on them —
+    plus ``"auto"``, the profile-guided spec.
+
+    ``three_part=True``: the CONCRETE ``"format+schedule+topology"``
+    product (respecting each format's ``topologies`` restriction, no
+    ``"auto"``) — the planner's candidate enumeration, and the single
+    source arm sweeps and combo tests derive from.
     """
-    return sorted(f"{f}+{s}" for f, fmt in _FORMATS.items()
-                  for s in fmt.schedules)
+    if three_part:
+        return sorted(f"{f}+{s}+{t}" for f, fmt in _FORMATS.items()
+                      for s in fmt.schedules for t in format_topologies(f))
+    return sorted([f"{f}+{s}" for f, fmt in _FORMATS.items()
+                   for s in fmt.schedules] + [AUTO_SPEC])
 
 
 def supported_topology_specs() -> List[str]:
-    """Every valid ``"format+schedule+topology"`` combination, sorted."""
-    return sorted(f"{f}+{s}+{t}" for f, fmt in _FORMATS.items()
-                  for s in fmt.schedules for t in format_topologies(f))
+    """Every valid ``"format+schedule+topology"`` combination, sorted
+    (alias of ``supported_specs(three_part=True)``)."""
+    return supported_specs(three_part=True)
 
 
 def validate_combo(fmt: str, schedule: str,

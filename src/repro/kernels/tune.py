@@ -18,6 +18,11 @@ Resolution order of :func:`get_config`:
 3. backend defaults (no implicit sweep: tests and library imports must stay
    hermetic — benchmarks and first-use call :func:`autotune` explicitly).
 
+The file→env→default persistence itself lives in
+:class:`repro.engine.plans.RecordStore` — the same contract the spec
+planner's ``BENCH_planner.json`` rides — this module keeps only the
+ELL-specific parts (backend defaults, the sweep, the record schema).
+
 The bucket-scheme arm times the real consumer (the jitted
 ``ell_aggregate`` forward+backward) per candidate; the tile arm only runs
 where tiles matter (a native TPU backend — interpret-mode timings would
@@ -25,10 +30,21 @@ tune the numpy emulator, not the hardware).
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 from typing import Dict, List, Optional
+
+_STORE = None
+
+
+def _store():
+    # lazy: importing repro.engine at module load would cycle back through
+    # the formats' kernel imports; by call time everything is registered
+    global _STORE
+    if _STORE is None:
+        from repro.engine.plans import RecordStore
+        _STORE = RecordStore(DEFAULT_FILENAME, ENV_PATH)
+    return _STORE
+
 
 DEFAULT_FILENAME = "BENCH_autotune.json"
 ENV_PATH = "REPRO_AUTOTUNE_PATH"
@@ -49,7 +65,7 @@ _config: Optional[Dict] = None
 
 
 def cache_path() -> str:
-    return os.environ.get(ENV_PATH, DEFAULT_FILENAME)
+    return _store().path()
 
 
 def _backend() -> str:
@@ -62,16 +78,13 @@ def get_config() -> Dict:
     global _config
     if _config is not None:
         return _config
-    path = cache_path()
     cfg = dict(DEFAULTS.get(_backend(), DEFAULTS["cpu"]))
-    if os.path.exists(path):
+    rec = _store().load()             # unreadable/corrupt cache → None
+    if rec is not None and rec.get("backend") == _backend():
         try:
-            with open(path) as f:
-                rec = json.load(f)
-            if rec.get("backend") == _backend():
-                cfg.update(rec.get("config", {}))
-        except (OSError, ValueError, KeyError):
-            pass                      # unreadable cache → defaults
+            cfg.update(rec.get("config", {}))
+        except (ValueError, TypeError):
+            pass                      # malformed config block → defaults
     _config = cfg
     return cfg
 
@@ -147,14 +160,10 @@ def autotune(path: Optional[str] = None, *, force: bool = False,
     """
     path = path or cache_path()
     backend = _backend()
-    if not force and os.path.exists(path):
-        try:
-            with open(path) as f:
-                rec = json.load(f)
-            if rec.get("backend") == backend:
-                return rec
-        except (OSError, ValueError):
-            pass
+    if not force:
+        rec = _store().load(path)
+        if rec is not None and rec.get("backend") == backend:
+            return rec
 
     caps_timings: List[Dict] = []
     for caps in CAPS_CANDIDATES:
@@ -180,7 +189,6 @@ def autotune(path: Optional[str] = None, *, force: bool = False,
         "sweep": {"caps": caps_timings, "tiles": tile_timings,
                   "n": n, "deg": deg, "d": d, "n_reps": n_reps},
     }
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=1)
+    _store().save(rec, path)
     reset()                           # next get_config() sees the new file
     return rec

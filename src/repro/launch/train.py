@@ -96,7 +96,8 @@ def train_gcn(dataset: str = "flickr", *, model: str = "gcn",
     finally:
         tr.close()
     return {"params": tr.params, "loss_history": history,
-            "orders": orders, "wall_s": time.time() - t0}
+            "orders": orders, "wall_s": time.time() - t0,
+            "spec": tr.engine.spec, "requested_spec": tr.requested_spec}
 
 
 def _estimator_orders(ds, sampler, cfg, batch_size: int, seed: int, *,
@@ -130,6 +131,13 @@ def _train_gcn_reference(dataset: str, *, model: str, dataflow: str,
     if engine is not None and dataflow == "ours":
         from repro.engine import EngineConfig, get_format
         cfg_spec = EngineConfig.from_spec(engine)
+        if cfg_spec.is_auto:
+            raise ValueError(
+                "engine spec 'auto': the reference loop jits one fixed "
+                "single-device layer stack, so there is nothing for the "
+                "planner to choose — the engine-native Trainer path "
+                "(model='gcn', dataflow='ours') resolves 'auto', or name "
+                'a concrete traceable spec such as "coo+serial"')
         if not get_format(cfg_spec.format).traceable:
             raise ValueError(
                 f"engine spec {engine!r}: format {cfg_spec.format!r} "
@@ -257,7 +265,8 @@ def main() -> None:
     g.add_argument("--model", default="gcn", choices=["gcn", "sage"])
     g.add_argument("--dataflow", default="ours", choices=["ours", "naive"])
     g.add_argument("--engine", default=None,
-                   help="Engine spec, e.g. coo+serial (default) — see "
+                   help="Engine spec, e.g. coo+serial (default) or 'auto' "
+                        "(profile-guided: planner picks the spec) — see "
                         "repro.engine.supported_specs(); every registered "
                         "spec trains end-to-end")
     g.add_argument("--n-cores", type=int, default=1,

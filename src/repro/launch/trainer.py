@@ -98,6 +98,14 @@ class Trainer:
             elif lr is not None:
                 engine = EngineConfig(**{**engine.__dict__, "lr": lr})
             engine = Engine(engine)
+        self.requested_spec = engine.spec
+        if engine.is_auto:
+            # resolve BEFORE any mesh exists: the topology-aware mesh needs
+            # a concrete interconnect, and a run plans exactly once —
+            # resume pins this resolved spec, never re-plans mid-run
+            engine = engine.resolve(
+                int(mesh.shape[engine.config.axis]) if mesh is not None
+                else n_cores)
         self.engine = engine
         if isinstance(dataset, str):
             dataset = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
@@ -193,7 +201,8 @@ class Trainer:
     def _extra(self) -> Dict[str, Any]:
         return {"step": self.global_step, "epochs_done": self.epochs_done,
                 "pipeline": self._pipeline_state(),
-                "spec": self.engine.spec}
+                "spec": self.engine.spec,
+                "requested_spec": self.requested_spec}
 
     def save(self, *, sync: bool = False) -> None:
         if self.mgr is None:
@@ -210,6 +219,13 @@ class Trainer:
         if hit is None:
             return False
         self.params, extra, _ = hit
+        saved_spec = extra.get("spec")
+        if self.requested_spec == "auto" and saved_spec \
+                and saved_spec != self.engine.spec:
+            # the checkpoint pins the concrete spec its auto run resolved
+            # at launch — a resume must continue bit-exactly on those
+            # wires even if the planner record changed since
+            self._rebind(saved_spec)
         self.global_step = int(extra["step"])
         self.epochs_done = int(extra.get("epochs_done", 0))
         if self.fetcher is not None:
@@ -217,6 +233,17 @@ class Trainer:
         else:
             self.pipeline.restore(extra["pipeline"])
         return True
+
+    def _rebind(self, spec: str) -> None:
+        """Swap the concrete engine under the existing mesh (the mesh is
+        1-D for every topology, so only the bundle rebuilds); cached val
+        batches are invalidated — they were placed through the old
+        bundle."""
+        engine = Engine(self.engine.config.with_spec(spec))
+        engine.topology.validate_cores(self.n_cores)
+        self.engine = engine
+        self.bundle = engine.build(self.mesh)
+        self._val_batches = None
 
     def close(self) -> None:
         if self.fetcher is not None:
@@ -290,6 +317,7 @@ class Trainer:
         spe = steps_per_epoch if steps_per_epoch is not None \
             else self.pipeline.batches_per_epoch
         out: Dict[str, Any] = {"spec": self.engine.spec,
+                               "requested_spec": self.requested_spec,
                                "n_cores": self.n_cores,
                                "input_pipeline": self.input_pipeline,
                                "loss_history": [], "val_acc": [],

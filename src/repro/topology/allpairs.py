@@ -27,6 +27,7 @@ class AllPairsTopology(Topology):
 
     description = ("dense all-to-all reference: P-1 rotation rounds, one "
                    "direct block per peer, no fold-tree reuse")
+    link_parallelism = 1.0    # one rotation permutation busy per round
 
     def steps(self, n_cores: int) -> int:
         return n_cores - 1

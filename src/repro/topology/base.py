@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,8 +68,14 @@ class ExchangePlan:
     ``bytes_per_core`` the wire bytes each core ships per reduce-scatter of
     ``n_rows`` rows × ``d`` features; ``max_step_rows`` the largest single
     message (rows) any step puts on a wire — the buffer a real NoC must
-    provision.  Host-side accounting only: the benchmarks record it, the
-    roofline consumes it; no traced code reads a plan.
+    provision.  ``link_parallelism`` is how many disjoint link sets the
+    topology keeps busy simultaneously (torus2d's orthogonal row+column
+    halves give 2.0 — effective wire bytes are ``bytes_per_core`` divided
+    by it); ``predicted_seconds`` is the planner cost model's estimate for
+    one reduce-scatter when a :class:`repro.engine.planner.CostModel` was
+    handed to :meth:`Topology.plan`.  Host-side accounting only: the
+    benchmarks record it, the roofline and planner consume it; no traced
+    code reads a plan.
     """
 
     topology: str
@@ -77,6 +84,8 @@ class ExchangePlan:
     bytes_per_core: int
     max_step_rows: int
     axis: str = "model"
+    link_parallelism: float = 1.0
+    predicted_seconds: Optional[float] = None
 
 
 class Topology:
@@ -92,6 +101,9 @@ class Topology:
 
     name: str = "?"
     description: str = ""
+    # disjoint link sets the schedule keeps busy at once (torus2d: 2.0);
+    # the cost model divides wire bytes by this
+    link_parallelism: float = 1.0
 
     # -- plan / cost model (host side) ---------------------------------------
     def validate_cores(self, n_cores: int) -> None:
@@ -122,15 +134,26 @@ class Topology:
         return n_rows // n_cores if n_cores > 1 else 0
 
     def plan(self, n_rows: int, d: int, n_cores: int,
-             dtype_bytes: int = 4, axis: str = "model") -> ExchangePlan:
-        """The per-step exchange plan (steps + wire cost) for ``n_cores``."""
+             dtype_bytes: int = 4, axis: str = "model",
+             cost_model=None) -> ExchangePlan:
+        """The per-step exchange plan (steps + wire cost) for ``n_cores``.
+
+        ``cost_model`` (a :class:`repro.engine.planner.CostModel`, duck-typed
+        on ``.predict(plan)``) fills ``predicted_seconds``; without one the
+        field stays ``None`` — planning never requires a fitted model.
+        """
         self.validate_cores(n_cores)
-        return ExchangePlan(
+        plan = ExchangePlan(
             topology=self.name, n_cores=n_cores,
             steps=self.steps(n_cores),
             bytes_per_core=self.bytes_per_core(n_rows, d, n_cores,
                                                dtype_bytes),
-            max_step_rows=self.max_step_rows(n_rows, n_cores), axis=axis)
+            max_step_rows=self.max_step_rows(n_rows, n_cores), axis=axis,
+            link_parallelism=self.link_parallelism)
+        if cost_model is not None:
+            plan = dataclasses.replace(
+                plan, predicted_seconds=float(cost_model.predict(plan)))
+        return plan
 
     # -- collectives (inside shard_map) --------------------------------------
     def reduce_scatter(self, partial: jnp.ndarray, axis_name: str,

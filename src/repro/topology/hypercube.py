@@ -251,6 +251,7 @@ class HypercubeTopology(Topology):
     description = ("log2(P)-step dimension-ordered pairwise exchange, high "
                    "bit first; the paper's 4-D NoC and the fp32 oracle "
                    "schedule")
+    link_parallelism = 1.0    # one pairwise link set busy per round
 
     def steps(self, n_cores: int) -> int:
         return max(n_cores.bit_length() - 1, 0)

@@ -26,6 +26,7 @@ class RingTopology(Topology):
 
     description = ("bandwidth-optimal ring: P-1 neighbour hops of running "
                    "partial sums, minimum per-step message size")
+    link_parallelism = 1.0    # one neighbour link direction busy per hop
 
     def steps(self, n_cores: int) -> int:
         return n_cores - 1

@@ -51,6 +51,9 @@ class Torus2DTopology(Topology):
     description = ("2-D torus (R x C grid): feature halves fold along "
                    "orthogonal dimension orders in parallel — row links "
                    "and column links busy simultaneously")
+    # the orthogonal halves occupy disjoint row/column link sets at every
+    # step, so the wire sees half the per-core bytes at a time
+    link_parallelism = 2.0
 
     def steps(self, n_cores: int) -> int:
         return max(n_cores.bit_length() - 1, 0)

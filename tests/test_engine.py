@@ -52,7 +52,47 @@ def test_supported_specs_lists_all_builtin_combos():
     from repro.engine import supported_specs
 
     assert set(supported_specs()) >= {"coo+serial", "block+pipelined",
-                                      "ell+pipelined"}
+                                      "ell+pipelined", "auto"}
+
+
+def test_available_specs_is_the_canonical_enumeration():
+    """``Engine.available_specs`` replaces hand-built format×topology
+    products everywhere (test sweeps, benchmark arms)."""
+    from repro.engine import (Engine, available_topologies,
+                              supported_specs)
+
+    assert Engine.available_specs() == supported_specs()
+    full = Engine.available_specs(three_part=True)
+    assert full == supported_specs(three_part=True)
+    assert "auto" not in full
+    # every concrete 2-part spec appears once per topology it supports
+    for spec in supported_specs():
+        if spec == "auto":
+            continue
+        carried = [s for s in full if s.startswith(spec + "+")]
+        assert len(carried) == len(available_topologies())
+
+
+def test_auto_spec_parses_and_is_complete():
+    from repro.engine import Engine, EngineConfig
+
+    cfg = EngineConfig.from_spec("auto", lr=0.1)
+    assert cfg.is_auto and cfg.spec == "auto"
+    eng = Engine(cfg)
+    assert eng.is_auto and eng.spec == "auto"
+    # resolution (hermetic fallback here) yields a registered concrete spec
+    resolved = eng.resolve(4)
+    assert not resolved.is_auto
+    assert resolved.spec in Engine.available_specs() \
+        or resolved.spec in Engine.available_specs(three_part=True)
+    # knobs survive resolution
+    assert resolved.config.lr == 0.1
+    # "auto" is complete: pairing it with explicit parts is rejected with
+    # the usual ValueError contract
+    with pytest.raises(ValueError, match="complete spec"):
+        EngineConfig.from_spec("auto+ring")
+    with pytest.raises(ValueError, match="complete spec"):
+        EngineConfig(format="auto", schedule="pipelined")
 
 
 @pytest.mark.parametrize("bad,needle", [
@@ -73,6 +113,15 @@ def test_invalid_specs_raise_listing_options(bad, needle):
 
     with pytest.raises(ValueError, match=needle):
         EngineConfig.from_spec(bad)
+
+
+def test_unknown_format_error_mentions_auto():
+    """The spec grammar grew a planner alias: a typo'd format is told both
+    the registered formats AND that 'auto' exists."""
+    from repro.engine import EngineConfig
+
+    with pytest.raises(ValueError, match="'auto'"):
+        EngineConfig.from_spec("csr+serial")
 
 
 def test_invalid_knobs_raise():
@@ -149,8 +198,10 @@ def test_every_combo_matches_serial_oracle(n_devices):
                                    rtol=2e-4, atol=2e-4)
         g_ref = np.asarray(jax.grad(
             lambda xx: jnp.sum(coo.matmul(xx) ** 2))(x))
-        specs = supported_specs()
-        assert len(specs) >= 3, specs
+        # the canonical enumeration, not a hand-built product ('auto'
+        # rides along and must resolve to a matching concrete engine)
+        specs = Engine.available_specs()
+        assert specs == supported_specs() and len(specs) >= 4, specs
         for spec in specs:
             b = Engine(spec).build(mesh, graph=coo)
             y = np.asarray(b.aggregate(x))
@@ -170,7 +221,7 @@ def test_every_combo_train_step_matches_oracle_loss():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np
         from repro.distributed.gcn_train import init_params
-        from repro.engine import Engine, EngineConfig, supported_specs
+        from repro.engine import Engine, EngineConfig
         from repro.graph.coo import from_edges
 
         PC = 4
@@ -189,7 +240,7 @@ def test_every_combo_train_step_matches_oracle_loss():
         mesh = jax.make_mesh((PC,), ('model',))
         params0 = init_params(jax.random.PRNGKey(0), [(8, 4)])
         losses = {}
-        for spec in supported_specs():
+        for spec in Engine.available_specs():
             bundle = Engine(EngineConfig.from_spec(spec,
                                                    lr=0.3)).build(mesh)
             b = bundle.shard_batch(_MB(), feats, labels)

@@ -1,0 +1,373 @@
+"""The profile-guided planner behind ``Engine("auto")``.
+
+Contracts:
+  * resolution tiers in order — persisted autotune winner beats the fitted
+    cost model beats the static ``DEFAULT_SPEC`` fallback — and every tier
+    degrades silently-but-warned: a missing file is no file, a corrupt or
+    stale record is a ``RuntimeWarning`` and a fall-through, never a crash;
+  * the cost model is monotone by construction (nonnegative α/β: more
+    exchange steps or more effective wire bytes never predicts a faster
+    step) and recovers planted coefficients from a fabricated sweep record;
+  * ``Topology.plan(..., cost_model=)`` stamps ``predicted_seconds``;
+  * ``"auto"`` resolves to a registered concrete spec on 2 and 4 simulated
+    devices, trains end-to-end through the Trainer, and a mid-run
+    checkpoint + resume pins the RESOLVED spec bit-exactly even when the
+    planner record changes under the run;
+  * :func:`repro.engine.planner.autotune` persists a winner that a fresh
+    ``Engine("auto")`` then follows.
+
+Hermeticity: every test points ``$REPRO_PLANNER_PATH`` /
+``$REPRO_TOPOLOGY_PATH`` into ``tmp_path`` so a developer's real
+``BENCH_*.json`` in the CWD can never leak in (run_subprocess forwards
+os.environ, so the monkeypatched paths reach the child processes too).
+"""
+import json
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_stores(monkeypatch, tmp_path):
+    """No test sees a real planner/topology record unless it writes one."""
+    monkeypatch.setenv("REPRO_PLANNER_PATH", str(tmp_path / "planner.json"))
+    monkeypatch.setenv("REPRO_TOPOLOGY_PATH",
+                       str(tmp_path / "topology.json"))
+    return tmp_path
+
+
+# ---------------------------------------------------------------------------
+# Fabricated records with planted coefficients.
+# ---------------------------------------------------------------------------
+ALPHA, BETA, CONST = 2e-3, 4e-9, 1e-3
+
+
+def _topology_record(n_cores=4, mid=512, feat=128, backend=None,
+                     alpha=ALPHA, beta=BETA, const=CONST):
+    """A BENCH_topology.json-shaped sweep whose step times follow
+    ``t = const + α·steps + β·bytes/link_parallelism`` exactly."""
+    from repro.engine import available_topologies, get_topology
+
+    rec = {"n_cores": n_cores, "mid": mid, "feat": feat,
+           "base_spec": "ell+pipelined",
+           "topologies": sorted(available_topologies())}
+    if backend is not None:
+        rec["backend"] = backend
+    for name in rec["topologies"]:
+        topo = get_topology(name)
+        plan = topo.plan(mid, feat, n_cores)
+        eff = plan.bytes_per_core / plan.link_parallelism
+        rec[f"exchange_steps_{name}"] = plan.steps
+        rec[f"exchange_bytes_per_core_{name}"] = plan.bytes_per_core
+        rec[f"link_parallelism_{name}"] = plan.link_parallelism
+        rec[f"s_per_step_{name}"] = const + alpha * plan.steps + beta * eff
+    return rec
+
+
+def _write(path, obj):
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: no records at all → the static fallback, hermetically.
+# ---------------------------------------------------------------------------
+def test_no_records_resolves_to_static_default():
+    from repro.engine import planner
+    from repro.engine.config import EngineConfig
+
+    spec = planner.resolve_spec(n_cores=4)
+    assert spec == planner.DEFAULT_SPEC
+    cfg = EngineConfig.from_spec(spec)      # the fallback must be concrete
+    assert not cfg.is_auto
+    # resolution is a pure read: no sweep left a record behind
+    assert planner.PLANNER_STORE.load() is None
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: the persisted autotune winner.
+# ---------------------------------------------------------------------------
+def test_persisted_winner_beats_everything(tmp_path):
+    from repro.engine import planner
+
+    backend = "cpu"
+    entry = {"spec": "block+pipelined+ring", "backend": backend,
+             "n_cores": 4, "bucket": "default"}
+    _write(tmp_path / "planner.json",
+           {"entries": {planner._entry_key(backend, 4, "default"): entry}})
+    # a cost-model record that would pick something else is outranked
+    _write(tmp_path / "topology.json", _topology_record(n_cores=4))
+    assert planner.resolve_spec(n_cores=4,
+                                backend=backend) == "block+pipelined+ring"
+    # the winner is keyed per core count: a 4-core entry says nothing at 2
+    assert planner.resolve_spec(n_cores=2,
+                                backend=backend) == planner.DEFAULT_SPEC
+
+
+def test_exact_bucket_beats_prefix_match(tmp_path):
+    from repro.engine import planner
+
+    stats = planner.GraphStats(n_dst=500, n_src=1000, avg_deg=7.0,
+                               feat_dim=100)
+    exact = planner._entry_key("cpu", 4, stats.bucket())
+    other = planner._entry_key("cpu", 4, "n64_s128_d4_f16")
+    _write(tmp_path / "planner.json", {"entries": {
+        other: {"spec": "coo+serial+allpairs"},
+        exact: {"spec": "ell+pipelined+torus2d"},
+    }})
+    got = planner.resolve_spec(n_cores=4, graph_stats=stats, backend="cpu")
+    assert got == "ell+pipelined+torus2d"
+    # without stats the deterministic sorted-prefix fallback still finds
+    # SOME measured entry at this (backend, n_cores)
+    got = planner.resolve_spec(n_cores=4, backend="cpu")
+    assert got in ("coo+serial+allpairs", "ell+pipelined+torus2d")
+
+
+def test_corrupt_record_warns_and_falls_back(tmp_path):
+    from repro.engine import planner
+
+    (tmp_path / "planner.json").write_text("{not json")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert planner.resolve_spec(n_cores=4) == planner.DEFAULT_SPEC
+
+
+def test_stale_spec_warns_and_falls_back(tmp_path):
+    from repro.engine import planner
+
+    key = planner._entry_key("cpu", 4, "default")
+    _write(tmp_path / "planner.json",
+           {"entries": {key: {"spec": "csr+magic+wormhole"}}})
+    with pytest.warns(RuntimeWarning, match="stale/unregistered"):
+        got = planner.resolve_spec(n_cores=4, backend="cpu")
+    assert got == planner.DEFAULT_SPEC
+
+
+def test_missing_entries_table_warns_and_falls_back(tmp_path):
+    from repro.engine import planner
+
+    _write(tmp_path / "planner.json", {"spec": "ell+pipelined"})
+    with pytest.warns(RuntimeWarning, match="entries"):
+        assert planner.resolve_spec(n_cores=4) == planner.DEFAULT_SPEC
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: the fitted cost model.
+# ---------------------------------------------------------------------------
+def test_nnls_recovers_and_clamps():
+    from repro.engine.planner import _nnls
+
+    rng = np.random.default_rng(0)
+    A = rng.uniform(0.5, 2.0, (12, 3))
+    true = np.array([0.3, 1.7, 0.0])
+    coef = _nnls(A, A @ true)
+    assert np.allclose(coef, true, atol=1e-8)
+    assert (coef >= 0).all()
+    # a column that only helps with a NEGATIVE weight is clamped to zero
+    y = A @ np.array([1.0, 0.0, 0.0]) - 0.5 * A[:, 2]
+    coef = _nnls(A, y)
+    assert coef[2] == 0.0
+
+
+def test_fit_cost_model_recovers_planted_coefficients(tmp_path):
+    from repro.engine import planner
+
+    _write(tmp_path / "topology.json", _topology_record(n_cores=4))
+    model = planner.fit_cost_model(n_cores=4)
+    assert model is not None
+    assert model.alpha == pytest.approx(ALPHA, rel=1e-6)
+    assert model.beta == pytest.approx(BETA, rel=1e-6)
+    assert model.const == pytest.approx(CONST, rel=1e-6)
+    assert model.n_cores == 4
+
+
+def test_fit_cost_model_rejects_mismatched_records(tmp_path):
+    from repro.engine import planner
+
+    _write(tmp_path / "topology.json", _topology_record(n_cores=4,
+                                                        backend="tpu"))
+    # per-(backend, axis-size) coefficients: a 4-core sweep says nothing
+    # about a 2-core mesh, a tpu sweep nothing about cpu
+    assert planner.fit_cost_model(n_cores=2) is None
+    assert planner.fit_cost_model(n_cores=4, backend="cpu") is None
+    assert planner.fit_cost_model(n_cores=4, backend="tpu") is not None
+    # fewer than 3 measured arms → underdetermined → None
+    rec = _topology_record(n_cores=4)
+    rec["topologies"] = rec["topologies"][:2]
+    assert planner.fit_cost_model(record=rec) is None
+    # corrupt topology store: warn, never raise
+    (tmp_path / "topology.json").write_text("][")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert planner.fit_cost_model(n_cores=4) is None
+
+
+def test_cost_model_is_monotone():
+    """More steps or more effective bytes never predicts a faster step —
+    guaranteed by the nonnegative fit, checked against the fitted model."""
+    import dataclasses
+
+    from repro.engine import planner
+    from repro.topology.base import ExchangePlan
+
+    model = planner.fit_cost_model(record=_topology_record(n_cores=4))
+    base = ExchangePlan(topology="hypercube", n_cores=4, steps=2,
+                        bytes_per_core=1 << 20, max_step_rows=256)
+    for field, worse in (("steps", 5), ("bytes_per_core", 1 << 24)):
+        bigger = dataclasses.replace(base, **{field: worse})
+        assert model.predict(bigger) >= model.predict(base)
+    # higher link parallelism = fewer effective bytes = never slower
+    wide = dataclasses.replace(base, link_parallelism=2.0)
+    assert model.predict(wide) <= model.predict(base)
+
+
+def test_plan_stamps_predicted_seconds():
+    from repro.engine import get_topology, planner
+
+    model = planner.fit_cost_model(record=_topology_record(n_cores=4))
+    topo = get_topology("hypercube")
+    plain = topo.plan(512, 128, 4)
+    assert plain.predicted_seconds is None          # opt-in, no model → None
+    plan = topo.plan(512, 128, 4, cost_model=model)
+    assert plan.predicted_seconds == pytest.approx(model.predict(plain))
+    assert plan.predicted_seconds > 0
+
+
+def test_analytic_tier_ranks_and_resolves(tmp_path):
+    """With only a topology sweep on disk the analytic tier picks the
+    min-predicted topology — torus2d here, whose orthogonal halves halve
+    the effective bytes under a byte-dominated planted model."""
+    from repro.engine import planner
+    from repro.engine.config import EngineConfig
+
+    _write(tmp_path / "topology.json",
+           _topology_record(n_cores=4, alpha=1e-6, beta=1e-7, const=1e-4))
+    model = planner.fit_cost_model(n_cores=4)
+    ranked = planner.rank_specs(model, 4)
+    assert ranked[0][0] == "ell+pipelined+torus2d"
+    assert all(a[1] <= b[1] for a, b in zip(ranked, ranked[1:]))
+    spec = planner.resolve_spec(n_cores=4)
+    assert spec == "ell+pipelined+torus2d"
+    assert not EngineConfig.from_spec(spec).is_auto
+    # a latency-dominated model (β=0) prefers the fewest-step topology
+    _write(tmp_path / "topology.json",
+           _topology_record(n_cores=4, alpha=1e-3, beta=0.0, const=1e-4))
+    spec = planner.resolve_spec(n_cores=4)
+    assert spec in ("ell+pipelined+hypercube", "ell+pipelined+torus2d")
+
+
+def test_graph_stats_bucketing():
+    from repro.engine import planner
+
+    a = planner.GraphStats(n_dst=500, n_src=1000, avg_deg=7.2, feat_dim=100)
+    b = planner.GraphStats(n_dst=512, n_src=1024, avg_deg=8.0, feat_dim=128)
+    assert a.bucket() == b.bucket() == "n512_s1024_d8_f128"
+    c = planner.GraphStats(n_dst=513, n_src=1024, avg_deg=8.0, feat_dim=128)
+    assert c.bucket() != a.bucket()
+
+
+# ---------------------------------------------------------------------------
+# Engine("auto") end-to-end on simulated devices.
+# ---------------------------------------------------------------------------
+def test_auto_resolves_and_trains_on_2_and_4_devices():
+    run_subprocess(textwrap.dedent("""
+        from repro.engine import Engine, supported_specs
+        from repro.launch.trainer import Trainer
+
+        concrete = set(supported_specs(three_part=True))
+        for n in (2, 4):
+            eng = Engine('auto')
+            resolved = eng.resolve(n)
+            assert not resolved.is_auto
+            # .spec canonicalizes the default topology to the 2-part form
+            assert resolved.config.with_spec(resolved.spec) \
+                .spec == resolved.spec
+            tr = Trainer('auto', 'flickr', n_cores=n, scale=0.005,
+                         feat_dim=16, hidden=16, batch_size=16, lr=0.2,
+                         seed=0, input_pipeline='prefetch', val_batches=1)
+            assert tr.requested_spec == 'auto'
+            assert not tr.engine.is_auto
+            out = tr.fit(1, steps_per_epoch=3)
+            assert out['requested_spec'] == 'auto'
+            assert out['spec'] != 'auto'
+            assert len(out['loss_history']) == 3
+        print('OK')
+        """), n_devices=4)
+
+
+def test_auto_resume_pins_resolved_spec_bit_exact(tmp_path):
+    """Checkpoint an auto run mid-stream, then CHANGE the planner record
+    under it; the resumed run must pin the checkpoint's concrete spec (not
+    re-plan) and replay the loss trajectory bit-exactly."""
+    run_subprocess(textwrap.dedent(f"""
+        import json, os
+        from repro.launch.trainer import Trainer
+
+        kw = dict(scale=0.005, feat_dim=16, hidden=16, batch_size=16,
+                  lr=0.2, seed=3, input_pipeline='prefetch', val_batches=1)
+
+        full = Trainer('auto', 'flickr', n_cores=2, **kw)
+        pinned = full.engine.spec
+        full_losses = [full.train_steps(1)[0] for _ in range(8)]
+        full.close()
+
+        part = Trainer('auto', 'flickr', n_cores=2,
+                       ckpt_dir={str(tmp_path / 'ckpt')!r},
+                       ckpt_every=0, **kw)
+        assert part.engine.spec == pinned
+        part.train_steps(4)
+        part.save(sync=True)
+        part.close()
+
+        # a new autotune winner lands between save and resume: the resumed
+        # run must IGNORE it and continue on the checkpointed wires
+        divergent = 'coo+serial+allpairs'
+        assert divergent != pinned
+        from repro.engine import planner
+        key = planner._entry_key('cpu', 2, 'default')
+        with open(os.environ['REPRO_PLANNER_PATH'], 'w') as f:
+            json.dump({{'entries': {{key: {{'spec': divergent}}}}}}, f)
+        fresh = Trainer('auto', 'flickr', n_cores=2,
+                        ckpt_dir={str(tmp_path / 'ckpt')!r},
+                        ckpt_every=0, **kw)
+        assert fresh.engine.spec == divergent      # pre-resume: re-planned
+        assert fresh.resume() is True
+        assert fresh.engine.spec == pinned         # checkpoint wins
+        assert fresh.requested_spec == 'auto'
+        res = [fresh.train_steps(1)[0] for _ in range(4)]
+        fresh.close()
+        assert res == full_losses[4:], (res, full_losses[4:])
+        print('OK')
+        """), n_devices=2)
+
+
+def test_autotune_persists_and_auto_follows_winner():
+    """The compile-and-replay tier end to end at toy sizes: autotune two
+    candidate specs, check the persisted entry, and a fresh
+    ``Engine('auto')`` resolves through it."""
+    run_subprocess(textwrap.dedent("""
+        import json, os
+        from repro.engine import Engine, EngineConfig, planner
+
+        stats = planner.GraphStats(n_dst=32, n_src=64, avg_deg=4.0,
+                                   feat_dim=16)
+        cands = ['ell+pipelined+hypercube', 'coo+serial+allpairs']
+        entry = planner.autotune(stats, n_cores=2, candidates=cands,
+                                 n_steps=1, n_trials=2)
+        assert entry['spec'] in cands
+        assert entry['loss_match'] is True
+        assert set(entry['s_per_step']) == set(cands)
+        # persisted under the env-var path with the composite key
+        rec = json.load(open(os.environ['REPRO_PLANNER_PATH']))
+        key = planner._entry_key(entry['backend'], 2, stats.bucket())
+        assert rec['entries'][key]['spec'] == entry['spec']
+        # idempotent: a re-run returns the persisted entry, no re-measure
+        again = planner.autotune(stats, n_cores=2, candidates=cands,
+                                 n_steps=1, n_trials=2)
+        assert again == entry
+        # and Engine('auto') follows the winner (canonicalized)
+        resolved = Engine('auto').resolve(2, graph_stats=stats)
+        assert resolved.spec == EngineConfig.from_spec(entry['spec']).spec
+        print('OK')
+        """), n_devices=2)

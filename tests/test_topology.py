@@ -67,13 +67,19 @@ def test_registry_lists_builtin_topologies():
 
     topos = available_topologies()
     assert set(topos) >= {"hypercube", "allpairs", "ring", "torus2d"}
-    # two-part specs stay the canonical listing; the 3-part product is the
-    # full matrix (built-in formats ride every topology)
+    # two-part specs (plus "auto") stay the canonical listing; the 3-part
+    # product is the full matrix (built-in formats ride every topology)
     assert "ell+pipelined" in supported_specs()
+    assert "auto" in supported_specs()
     assert "+hypercube" not in "".join(supported_specs())
     full = supported_topology_specs()
+    assert full == supported_specs(three_part=True)
     assert "ell+pipelined+ring" in full and "coo+serial+torus2d" in full
-    assert len(full) == len(supported_specs()) * len(topos)
+    # the concrete product excludes "auto" — it is a planner alias, not a
+    # buildable combination
+    concrete = [s for s in supported_specs() if s != "auto"]
+    assert len(full) == len(concrete) * len(topos)
+    assert all(s.count("+") == 2 for s in full)
     assert format_topologies("coo") == topos
 
 
