@@ -41,6 +41,11 @@ TRACKED: Dict[str, str] = {
     # Engine('auto') vs the best manual arm (paired median); the smoke
     # gates it >= 0.9, this tracks that the planner's pick doesn't erode
     "auto.auto_vs_best_manual_speedup": "higher",
+    # sync-stall / staged-prefetch-stall for the mmap feature store (same
+    # same-host ratio construction as input_pipeline.stall_reduction), and
+    # the hot-vertex cache's absorbed fraction of frontier traffic
+    "feature_store.stall_reduction": "higher",
+    "feature_store.cache_hit_rate": "higher",
 }
 
 

@@ -27,6 +27,14 @@ sampling + per-batch layout build off the step critical path; results land
 in ``BENCH_input_pipeline.json`` and, via ``run --smoke``, in
 ``BENCH_smoke.json`` under ``input_pipeline``.
 
+``--feature-store`` measures feature residency: the dense device-resident
+baseline vs the ``host`` and ``mmap`` :mod:`repro.featurestore` backends,
+each under a synchronous and a STAGED prefetching pipeline (sample →
+gather → layout → place, one thread per stage) on one bit-matching
+stream, with a hot-vertex cache in front of the store; results land in
+``BENCH_feature_store.json`` and ``run --smoke`` gates
+``prefetch_reduces_stall`` + ``loss_match`` + ``cache_hit_rate > 0``.
+
 ``--topologies`` sweeps every registered interconnect topology (hypercube,
 allpairs, ring, torus2d, plus anything registered since) over ONE
 bit-matching synthetic stream: same graph, same batch, same seeds, only
@@ -869,6 +877,154 @@ def run_input_pipeline_arm(n_cores: int = 4, *, smoke: bool = False,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# --feature-store: device-resident vs out-of-core features, one bit-matching
+# stream — host-stall, gather traffic, and hot-vertex cache hit rate.
+# ---------------------------------------------------------------------------
+def measured_feature_store(n_cores: int = 4, spec: str = "ell+pipelined",
+                           dataset: str = "flickr", scale: float = 0.004,
+                           feat: int = 32, hidden: int = 32,
+                           batch: int = 32, steps: int = 8,
+                           warmup: int = 3, pad_multiple: int = 64,
+                           seed: int = 0, cache_capacity: int = 64,
+                           modes=("device", "host", "mmap")) -> Dict:
+    """The Trainer on each feature residency mode, sync vs staged prefetch.
+
+    ``device`` is the dense in-memory baseline; ``host``/``mmap`` are
+    registered :mod:`repro.featurestore` backends with a hot-vertex cache
+    in front.  Every mode consumes the SAME deterministic batch stream
+    (store-backed :func:`make_dataset` generation is bit-identical to the
+    dense path at the same seed), so all loss trajectories must bit-match
+    — recorded as ``loss_match``.  Per store mode it records the sync
+    host-stall (gather + layout + placement inline on the step path), the
+    staged-prefetch stall (sample → gather → layout → place, each stage on
+    its own thread — only the queue wait the device step failed to hide),
+    the store bytes actually gathered in the measured window, and the
+    cache hit rate.  Headline keys (``stall_reduction``,
+    ``cache_hit_rate``, ``prefetch_reduces_stall``) come from the mmap
+    mode — the tier where a synchronous gather would pay disk latency on
+    the critical path.
+    """
+    from repro.launch.trainer import Trainer
+
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    out: Dict = {"n_cores": n_cores, "spec": spec, "dataset": dataset,
+                 "batch": batch, "steps": steps, "modes": list(modes),
+                 "cache_capacity": cache_capacity}
+    ref_losses = None
+    out["loss_match"] = True
+    for mode in modes:
+        ds = make_dataset(dataset, scale=scale, feat_dim=feat,
+                          features="dense" if mode == "device" else mode)
+        cap = 0 if mode == "device" else cache_capacity
+        try:
+            for pipe in ("sync", "prefetch"):
+                tr = Trainer(spec, ds, n_cores=n_cores, hidden=hidden,
+                             batch_size=batch, lr=0.05, seed=seed,
+                             input_pipeline=pipe,
+                             pad_multiple=pad_multiple, val_batches=0,
+                             cache_capacity=cap)
+                try:
+                    tr.train_steps(warmup)    # compile + queue prefill
+                    tr.reset_stall_stats()
+                    if tr.cache is not None:
+                        tr.cache.reset_stats()
+                    g0 = tr.store.bytes_gathered if tr.store else 0
+                    t0 = time.perf_counter()
+                    losses = tr.train_steps(steps)
+                    dt = time.perf_counter() - t0
+                    out[f"host_stall_s_per_step_{mode}_{pipe}"] = \
+                        tr.stall_per_step
+                    out[f"s_per_step_{mode}_{pipe}"] = dt / steps
+                    if tr.store is not None and pipe == "prefetch":
+                        # window delta: in-flight prefetched batches blur
+                        # the edges, but over the measured steps this is
+                        # the steady-state store traffic
+                        out[f"gather_bytes_{mode}"] = \
+                            int(tr.store.bytes_gathered - g0)
+                        if tr.cache is not None:
+                            out[f"cache_hit_rate_{mode}"] = \
+                                tr.cache.hit_rate
+                finally:
+                    tr.close()
+                if ref_losses is None:
+                    ref_losses = losses
+                elif max(abs(a - b)
+                         for a, b in zip(ref_losses, losses)) != 0.0:
+                    out["loss_match"] = False
+        finally:
+            if mode != "device":
+                ds.features.close()     # mmap: unlink the tempfile
+        if mode != "device":
+            ss = out[f"host_stall_s_per_step_{mode}_sync"]
+            sp = out[f"host_stall_s_per_step_{mode}_prefetch"]
+            out[f"stall_reduction_{mode}"] = ss / max(sp, 1e-9)
+            out[f"prefetch_reduces_stall_{mode}"] = bool(sp < ss)
+    head = "mmap" if "mmap" in modes \
+        else next((m for m in modes if m != "device"), None)
+    if head is not None:
+        out["headline_mode"] = head
+        out["stall_reduction"] = out[f"stall_reduction_{head}"]
+        out["prefetch_reduces_stall"] = out[f"prefetch_reduces_stall_{head}"]
+        out["cache_hit_rate"] = out.get(f"cache_hit_rate_{head}", 0.0)
+    return out
+
+
+def run_feature_store_arm(n_cores: int = 4, *, smoke: bool = False,
+                          spec: str = "ell+pipelined",
+                          out_path: str = "BENCH_feature_store.json"
+                          ) -> Dict:
+    """Re-exec the feature-store measurement under a forced multi-device
+    backend and write ``out_path`` (same child-process pattern as
+    :func:`run_overlap_arm`: XLA_FLAGS must precede the jax import)."""
+    kwargs: Dict = {"n_cores": n_cores, "spec": spec}
+    if smoke:
+        kwargs.update(scale=0.003, feat=32, hidden=32, batch=32, steps=6,
+                      warmup=2, cache_capacity=64)
+    child = (
+        "import json, sys; sys.path.insert(0, '.');"
+        "from benchmarks.epoch_time import measured_feature_store;"
+        f"print(json.dumps(measured_feature_store(**{kwargs!r})))"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_cores} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"feature-store arm failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"## feature store ({n_cores} simulated cores, {spec}): "
+          "device vs out-of-core, sync vs staged prefetch")
+    print("mode,pipeline,host_stall_s_per_step,s_per_step")
+    for mode in rec["modes"]:
+        for pipe in ("sync", "prefetch"):
+            print(f"{mode},{pipe},"
+                  f"{rec[f'host_stall_s_per_step_{mode}_{pipe}']:.4f},"
+                  f"{rec[f's_per_step_{mode}_{pipe}']:.4f}")
+    for mode in rec["modes"]:
+        if mode == "device":
+            continue
+        hr = rec.get(f"cache_hit_rate_{mode}")
+        print(f"# {mode}: staged prefetch cuts host stall "
+              f"{rec[f'stall_reduction_{mode}']:.1f}x (strictly less: "
+              f"{rec[f'prefetch_reduces_stall_{mode}']})  gather "
+              f"{rec[f'gather_bytes_{mode}'] / 1e6:.2f} MB"
+              + ("" if hr is None else f"  cache hit-rate {hr:.2f}"))
+    print(f"# loss bit-match across all modes: {rec['loss_match']}")
+    print(f"# (wrote {out_path})")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--overlap", action="store_true",
@@ -889,6 +1045,10 @@ def main() -> None:
                     help="comma-separated engine specs to measure against "
                          "the coo+serial oracle (replaces the old "
                          "--ell/--no-ell flag pair)")
+    ap.add_argument("--feature-store", action="store_true",
+                    help="measure feature residency (device vs host vs "
+                         "mmap store) under sync vs staged-prefetch input "
+                         "pipelines (writes BENCH_feature_store.json)")
     ap.add_argument("--topologies", action="store_true",
                     help="sweep every registered interconnect topology on "
                          "one bit-matching stream (exchange steps + bytes "
@@ -913,6 +1073,11 @@ def main() -> None:
     if args.auto:
         run_auto_arm(min(args.cores, 4) if args.smoke else args.cores,
                      smoke=args.smoke)
+        ran = True
+    if args.feature_store:
+        run_feature_store_arm(min(args.cores, 4) if args.smoke
+                              else args.cores,
+                              smoke=args.smoke, spec=args.spec)
         ran = True
     if args.input_pipeline is not None:
         modes = ("sync", "prefetch") if args.input_pipeline == "both" \

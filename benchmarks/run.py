@@ -9,14 +9,18 @@ aggregation arms at toy sizes (4 simulated cores), sweeps every registered
 interconnect topology on one bit-matching stream (``BENCH_topology.json``),
 runs the planner's auto arm — spec autotune persisted to
 ``BENCH_planner.json``, then ``Engine("auto")`` raced against the best
-manual spec (``BENCH_auto.json``) — sanity-runs the block-layout and ELL
-SpMM kernels against their oracle, diffs the fresh record against the
-previous ``BENCH_smoke.json`` (warn-only), and writes ``BENCH_smoke.json``
-+ ``BENCH_overlap.json`` for the workflow to upload as artifacts.  The
-smoke FAILS if the ELL arm's aggregation speedups drop to ≤1.0, the
-hypercube NoC stops beating the dense all-pairs reference, or the auto
-spec loses to the best manual arm by >10% (or stops bit-matching it) —
-no regression arm ships.
+manual spec (``BENCH_auto.json``) — measures feature residency (dense
+device-resident vs the ``host``/``mmap`` feature stores under sync vs
+staged-prefetch input pipelines, ``BENCH_feature_store.json``),
+sanity-runs the block-layout and ELL SpMM kernels against their oracle,
+diffs the fresh record against the previous ``BENCH_smoke.json``
+(warn-only), and writes ``BENCH_smoke.json`` + ``BENCH_overlap.json`` for
+the workflow to upload as artifacts.  The smoke FAILS if the ELL arm's
+aggregation speedups drop to ≤1.0, the hypercube NoC stops beating the
+dense all-pairs reference, the auto spec loses to the best manual arm by
+>10% (or stops bit-matching it), or the staged store pipeline stops
+cutting host stall / bit-matching the dense stream / hitting its
+hot-vertex cache — no regression arm ships.
 """
 from __future__ import annotations
 
@@ -50,7 +54,8 @@ def smoke() -> int:
 
     print(f"\n{'=' * 72}\nengine arms — coo+serial oracle vs "
           f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
-    from benchmarks.epoch_time import (run_auto_arm, run_input_pipeline_arm,
+    from benchmarks.epoch_time import (run_auto_arm, run_feature_store_arm,
+                                       run_input_pipeline_arm,
                                        run_overlap_arm, run_topology_arm)
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 
@@ -65,6 +70,10 @@ def smoke() -> int:
     print(f"\n{'=' * 72}\ninput pipeline — Trainer host-stall/step, "
           f"sync vs prefetch (toy)\n{'=' * 72}")
     rec["input_pipeline"] = run_input_pipeline_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\nfeature store — device vs host vs mmap, "
+          f"sync vs staged prefetch (toy)\n{'=' * 72}")
+    rec["feature_store"] = run_feature_store_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\nSpMM kernels vs oracle (interpret)\n{'=' * 72}")
     import numpy as np
@@ -116,6 +125,7 @@ def smoke() -> int:
     ip = rec["input_pipeline"]
     tp = rec["topology"]
     au = rec["auto"]
+    fs = rec["feature_store"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -141,7 +151,14 @@ def smoke() -> int:
           # best manual arm by >10% (paired median on a common-mode load)
           and au["auto_vs_best_manual_speedup"] >= 0.9
           and au["auto_loss_match"]
-          and au["resolved_matches_winner"])
+          and au["resolved_matches_winner"]
+          # the feature-store gate: out-of-core training must bit-match
+          # the dense stream, the STAGED prefetch (sample → gather →
+          # layout → place) must strictly cut host stall vs synchronous
+          # gather, and the hot-vertex cache must actually absorb traffic
+          and fs["prefetch_reduces_stall"]
+          and fs["loss_match"]
+          and fs["cache_hit_rate"] > 0)
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -15,7 +15,11 @@ format+schedule combination trains unchanged: ``coo+serial``,
 ``block+pipelined``, ``ell+pipelined``.  ``--dataset`` picks the synthetic
 stand-in (paper §5.1 stats); the default ``reddit`` scenario and e.g.
 ``--dataset flickr`` demonstrate the same Trainer on different graph
-skews/feature widths with zero code change.
+skews/feature widths with zero code change.  ``--feature-store mmap``
+moves the node features out-of-core: they live in a memory-mapped file,
+only each batch's frontier rows stream to the devices through the staged
+prefetch chain (sample → gather → layout → place), and a degree-keyed
+hot-vertex cache absorbs the hub traffic.
 """
 import argparse
 import os
@@ -37,17 +41,34 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--n-cores", type=int, default=16)
+    ap.add_argument("--feature-store", default="device",
+                    help="'device' (dense in-memory features) or a "
+                         "registered featurestore backend ('host', 'mmap')"
+                         " to stream frontier rows out-of-core")
+    ap.add_argument("--cache-capacity", type=int, default=256,
+                    help="hot-vertex cache rows in front of the store")
     args = ap.parse_args()
 
+    fs = None if args.feature_store == "device" else args.feature_store
     trainer = Trainer(args.spec, args.dataset, n_cores=args.n_cores,
                       scale=0.005, feat_dim=64, hidden=64, batch_size=64,
                       fanouts=(5, 10), lr=0.1, seed=0,
                       input_pipeline="prefetch", pad_multiple=64,
-                      val_batches=2)
+                      val_batches=2, feature_store=fs,
+                      cache_capacity=args.cache_capacity)
     print(f"mesh: {dict(trainer.mesh.shape)} — each device is one of the "
           f"paper's {trainer.n_cores} hypercube cores; engine spec: "
           f"{trainer.engine.spec}; dataset: {args.dataset}")
+    if trainer.store is not None:
+        print(f"features: out-of-core via the {trainer.feature_mode} store "
+              f"({trainer.store.nbytes / 1e6:.1f} MB backing, "
+              f"{args.cache_capacity}-row hot-vertex cache)")
     out = trainer.fit(args.epochs, steps_per_epoch=args.steps_per_epoch)
+    if "cache" in out:
+        c = out["cache"]
+        print(f"store traffic: {out['gather_bytes'] / 1e6:.2f} MB gathered, "
+              f"cache hit-rate {c['hit_rate']:.2f} "
+              f"({c['hits']} hits / {c['misses']} misses)")
     for ep, (acc, sps, stall) in enumerate(zip(
             out["val_acc"], out["steps_per_s"],
             out["host_stall_s_per_step"]), start=1):

@@ -1,7 +1,10 @@
 from .tokens import (TokenPipeline, lm_batch_specs, make_lm_batch,
                      synthetic_frames)
-from .graph_pipeline import GraphBatchPipeline, Prefetcher, assemble_batch
+from .graph_pipeline import (GraphBatchPipeline, Prefetcher,
+                             StagedPrefetcher, assemble_batch,
+                             gather_features, sample_batch)
 
 __all__ = ["TokenPipeline", "lm_batch_specs", "make_lm_batch",
            "synthetic_frames", "GraphBatchPipeline", "Prefetcher",
-           "assemble_batch"]
+           "StagedPrefetcher", "assemble_batch", "gather_features",
+           "sample_batch"]

@@ -32,6 +32,33 @@ from repro.graph.datasets import GraphDataset
 from repro.graph.sampler import MiniBatch, NeighborSampler
 
 
+def sample_batch(dataset: GraphDataset, sampler: NeighborSampler,
+                 seeds: np.ndarray, nnz_pad, rng: np.random.Generator
+                 ) -> Tuple[MiniBatch, np.ndarray]:
+    """The feature-free half of batch assembly: ``(mb, labels)``.
+
+    Labels are row-fancy-indexed (single-label ``[n]`` ints and multilabel
+    ``[n, c]`` rows alike) with padded seed rows zero-padded — they index
+    GLOBAL node 0's label, a placeholder the consumer masks (train loss
+    counts only real rows when masked; val accuracy scores only the first
+    ``len(seeds)`` rows).  The staged store pipeline runs this stage alone
+    and gathers features in its own stage."""
+    mb = sampler.sample(seeds, nnz_pad=nnz_pad, rng=rng)
+    pad = mb.layers[0].n_dst - len(seeds)
+    labels = dataset.labels[np.pad(seeds, (0, pad))]
+    return mb, labels
+
+
+def gather_features(features, input_nodes: np.ndarray,
+                    n_nodes: int) -> np.ndarray:
+    """THE frontier-gather rule: clamp-index padded frontier slots to the
+    last real node, then fancy-index ``features`` — a dense ndarray, a
+    :class:`~repro.featurestore.FeatureStore`, or a
+    :class:`~repro.featurestore.HotVertexCache` alike (all three share
+    the row-fancy-indexing surface, so one rule serves every tier)."""
+    return features[np.minimum(input_nodes, n_nodes - 1)]
+
+
 def assemble_batch(dataset: GraphDataset, sampler: NeighborSampler,
                    seeds: np.ndarray, nnz_pad, rng: np.random.Generator
                    ) -> Tuple[MiniBatch, np.ndarray, np.ndarray]:
@@ -39,27 +66,31 @@ def assemble_batch(dataset: GraphDataset, sampler: NeighborSampler,
 
     THE batch-assembly rule, shared by the epoch pipeline and the
     Trainer's validation path so padding/label semantics can never
-    diverge: frontier features are clamp-indexed, labels row-fancy-indexed
-    (single-label ``[n]`` ints and multilabel ``[n, c]`` rows alike) with
-    padded seed rows zero-padded — they index GLOBAL node 0's label, a
-    placeholder the consumer masks (train loss counts only real rows when
-    masked; val accuracy scores only the first ``len(seeds)`` rows)."""
-    mb = sampler.sample(seeds, nnz_pad=nnz_pad, rng=rng)
-    feats = dataset.features[np.minimum(mb.input_nodes,
-                                        dataset.graph.n_nodes - 1)]
-    pad = mb.layers[0].n_dst - len(seeds)
-    labels = dataset.labels[np.pad(seeds, (0, pad))]
+    diverge: :func:`sample_batch` + :func:`gather_features` fused —
+    the staged pipeline calls the two halves as separate stages."""
+    mb, labels = sample_batch(dataset, sampler, seeds, nnz_pad, rng)
+    feats = gather_features(dataset.features, mb.input_nodes,
+                            dataset.graph.n_nodes)
     return mb, feats, labels
 
 
 @dataclasses.dataclass
 class GraphBatchPipeline:
+    """Restartable epoch stream of sampled batches.
+
+    ``defer_gather=False`` (default) yields ``(mb, feats, labels)`` —
+    features gathered inline, the in-memory path.  ``defer_gather=True``
+    yields ``(mb, labels)`` and leaves the feature gather to a downstream
+    pipeline stage (the out-of-core store path: sampling must not block
+    on host/disk feature traffic it could overlap)."""
+
     dataset: GraphDataset
     sampler: NeighborSampler
     batch_size: int
     seed: int = 0
     epoch: int = 0
     batch_idx: int = 0
+    defer_gather: bool = False
 
     def _perm(self) -> np.ndarray:
         rng = np.random.default_rng(
@@ -86,8 +117,12 @@ class GraphBatchPipeline:
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, self.epoch, self.batch_idx]))
         self.batch_idx += 1
+        nnz_pad = self.sampler.static_nnz(self.batch_size)
+        if self.defer_gather:
+            return sample_batch(self.dataset, self.sampler, seeds,
+                                nnz_pad, rng)
         return assemble_batch(self.dataset, self.sampler, seeds,
-                              self.sampler.static_nnz(self.batch_size), rng)
+                              nnz_pad, rng)
 
     def state(self) -> Dict[str, int]:
         return {"seed": self.seed, "epoch": self.epoch,
@@ -216,28 +251,132 @@ class Prefetcher:
         self._consumed_state = self.source.state()
 
     def close(self) -> None:
-        """Stop the producer, drop any queued batches, and rewind the
-        source to the last CONSUMED batch — dropped in-flight work is
-        regenerated on the next ``__next__``, never skipped, so stop/start
-        (or checkpoint/restore) keeps the stream exact."""
-        if self._thread is not None:
-            self._stop.set()
-            while self._thread.is_alive():  # unblock a put-blocked producer
+        """Stop the producer, drop any queued batches (and any pending
+        producer error), and rewind the source to the last CONSUMED batch
+        — dropped in-flight work is regenerated on the next ``__next__``,
+        never skipped, so stop/start (or checkpoint/restore) keeps the
+        stream exact.
+
+        Idempotent and exception-safe: a double close, or a close after
+        the producer died (its error is discarded — consume via
+        ``__next__`` to observe it), is a no-op beyond re-asserting the
+        rewound source state.  The staged store pipeline closes stages
+        through cascading restores, so repeated closes are its NORMAL
+        path, not an error."""
+        thread, self._thread = self._thread, None
+        try:
+            if thread is not None:
+                self._stop.set()
+                while thread.is_alive():  # unblock a put-blocked producer
+                    try:
+                        self._q.get_nowait()
+                    except queue.Empty:
+                        pass
+                    thread.join(timeout=0.05)
+        finally:
+            # queue drain + source rewind run even if the join above blew
+            # up — a half-closed prefetcher must never hold stale batches
+            self._error = None
+            while True:                   # leave the queue empty for restart
                 try:
                     self._q.get_nowait()
                 except queue.Empty:
-                    pass
-                self._thread.join(timeout=0.05)
-            self._thread = None
-            self._error = None
-        while True:                       # leave the queue empty for restart
-            try:
-                self._q.get_nowait()
-            except queue.Empty:
-                break
-        self.source.restore(self._consumed_state)
+                    break
+            self.source.restore(self._consumed_state)
 
     def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class StagedPrefetcher:
+    """Multi-stage producer chain — the depth-2 double buffer grown into a
+    pipeline of named stages, each on its own thread with its own bounded
+    queue.
+
+    ``stages`` is a sequence of ``(name, fn)``; stage ``k``'s
+    :class:`Prefetcher` consumes stage ``k-1``'s output, so with the store
+    pipeline's ``sample → gather → layout → place`` chain, batch *i+2*'s
+    feature gather overlaps batch *i+1*'s layout build overlaps batch
+    *i*'s device step — the staged analogue of the paper's host-side NUMA
+    staging, with the store's gather latency hidden the same way the
+    layout build already was.
+
+    The restartable-stream contract survives the depth: every queue slot
+    in every stage carries the SOURCE state that regenerates its batch
+    (Prefetchers chain their ``state()``/``restore()`` verbatim), so
+    :meth:`state` is the innermost source's state as of the last batch
+    consumed from the LAST stage — all in-flight work in every queue is
+    excluded and regenerated on restore, preserving the batch-exact
+    ``(seed, epoch, batch_idx)`` checkpoint contract.
+
+    Stall accounting: :attr:`stall_per_step` is the LAST stage's stall —
+    the only host time the device step actually sees; :meth:`stage_stalls`
+    breaks the hidden time down per stage for the benchmarks.
+    """
+
+    def __init__(self, source, stages, depth: int = 2):
+        if not stages:
+            raise ValueError("StagedPrefetcher needs at least one stage")
+        self.source = source
+        self.names: Tuple[str, ...] = tuple(name for name, _ in stages)
+        if len(set(self.names)) != len(self.names):
+            raise ValueError(f"duplicate stage names: {list(self.names)}")
+        self.stages: list = []
+        cur = source
+        for _, fn in stages:
+            cur = Prefetcher(cur, prepare=fn, depth=depth)
+            self.stages.append(cur)
+        self._tail: Prefetcher = cur
+
+    # -- consumer -----------------------------------------------------------
+    def __iter__(self) -> "StagedPrefetcher":
+        return self
+
+    def __next__(self):
+        return next(self._tail)
+
+    @property
+    def stall_s(self) -> float:
+        return self._tail.stall_s
+
+    @property
+    def n_consumed(self) -> int:
+        return self._tail.n_consumed
+
+    @property
+    def stall_per_step(self) -> float:
+        return self._tail.stall_per_step
+
+    def stage_stalls(self) -> Dict[str, float]:
+        """Per-stage stall seconds per consumed item (stage k's stall =
+        time it spent waiting on stage k-1 — where the pipeline is
+        actually bottlenecked)."""
+        return {name: st.stall_per_step
+                for name, st in zip(self.names, self.stages)}
+
+    def reset_stats(self) -> None:
+        for st in self.stages:
+            st.reset_stats()
+
+    # -- restartable-stream contract ----------------------------------------
+    def state(self) -> Dict[str, int]:
+        return self._tail.state()
+
+    def restore(self, state: Dict[str, int]) -> None:
+        """Cascades down the chain: every stage drains its queue, then the
+        innermost source rewinds to ``state``."""
+        self._tail.restore(state)
+
+    def close(self) -> None:
+        """Close every stage (tail first — each stage's close rewinds its
+        upstream, cascading to the source; Prefetcher.close is idempotent,
+        so the overlapping rewinds are safe)."""
+        self._tail.close()
+
+    def __enter__(self) -> "StagedPrefetcher":
         return self
 
     def __exit__(self, *exc) -> None:

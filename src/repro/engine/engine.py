@@ -196,7 +196,7 @@ class EngineBundle:
         return self.config.spec
 
     # -- host-side batch prep ------------------------------------------------
-    def prepare_batch(self, mb, features: np.ndarray, labels: np.ndarray
+    def prepare_batch(self, mb, features, labels: np.ndarray
                       ) -> Dict[str, Any]:
         """Sampled minibatch → HOST-side batch pytree (numpy leaves, no
         device placement).
@@ -206,7 +206,19 @@ class EngineBundle:
         construction) — and it is pure host work, safe to run on a prefetch
         thread so it overlaps the previous device step.  Feed the result to
         :meth:`commit_batch`; :meth:`shard_batch` composes the two for
-        synchronous callers."""
+        synchronous callers.
+
+        ``features`` is either the gathered frontier rows (a dense
+        ``[n_frontier, d]`` array) or an out-of-core source — a
+        :class:`~repro.featurestore.FeatureStore` or
+        :class:`~repro.featurestore.HotVertexCache` — in which case the
+        frontier gather (``mb.input_nodes``, clamp-indexed like
+        :func:`repro.data.gather_features`) happens HERE, store-side, so
+        any shard_batch caller trains out-of-core with no other change."""
+        if hasattr(features, "gather"):   # FeatureStore / HotVertexCache
+            ids = np.minimum(np.asarray(mb.input_nodes, np.int64),
+                             features.shape[0] - 1)
+            features = features.gather(ids)
         edges, dims = self.format.prepare_batch(mb, self.n_cores,
                                                 self.config)
         labels = np.asarray(labels)

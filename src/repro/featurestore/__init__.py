@@ -1,0 +1,13 @@
+# Out-of-core feature store subsystem: node features behind a pluggable
+# backend registry (host RAM / mmap'd disk), streamed to the device one
+# frontier at a time by the staged input pipeline
+# (repro.data.StagedPrefetcher), with a degree-keyed hot-vertex device
+# cache absorbing hub traffic.  See README "Feature store".
+from .cache import HotVertexCache
+from .store import (FeatureStore, HostStore, MmapStore, available_stores,
+                    get_store, register_store)
+
+__all__ = [
+    "FeatureStore", "HostStore", "MmapStore", "HotVertexCache",
+    "register_store", "get_store", "available_stores",
+]

@@ -1,0 +1,273 @@
+"""Out-of-core feature stores — node features behind a pluggable backend.
+
+The paper's HBM regime (and the GPU-oriented data-communication paper,
+arxiv 2103.03330) splits feature traffic from compute: the full ``[n, d]``
+feature matrix stays in host memory (or on disk) and only each
+mini-batch's frontier rows stream to the device.  A :class:`FeatureStore`
+is that backing matrix: it quacks like a read-only 2-D ndarray (``shape``,
+``dtype``, fancy row indexing), so every ``dataset.features`` consumer —
+:func:`repro.data.assemble_batch`, the Trainer's validation path,
+``EngineBundle.prepare_batch`` — works unchanged, while every row read is
+an explicit, counted ``gather`` instead of an implicit device-resident
+array.
+
+Backends live in a registry mirroring ``engine/registry.py``'s
+``@register_format`` contract::
+
+    from repro.featurestore import FeatureStore, register_store
+
+    @register_store("redis")
+    class RedisStore(FeatureStore):
+        ...
+
+after which ``Trainer(feature_store="redis")`` and
+``make_dataset(features="redis")`` reach it with no other code change.
+Built-ins: ``host`` (RAM-resident ndarray — the pinned-host-memory tier)
+and ``mmap`` (a memory-mapped ``.npy`` file with a chunked writer, so
+features far beyond RAM are generated and served without ever
+materializing densely).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class FeatureStore:
+    """Base class for registered feature-store backends.
+
+    Subclasses implement :meth:`_rows` (the raw row copy-out) and the
+    writer half (:meth:`create` + :meth:`write_chunk`); ``name`` is filled
+    in by :func:`register_store`.  The base class owns the ndarray facade
+    and the gather accounting every benchmark reads: ``gather_calls`` /
+    ``bytes_gathered`` count the traffic that actually hit the backing
+    store (a device-side cache hit never shows up here — that is the
+    point of the cache).
+    """
+
+    name: str = "?"
+
+    def __init__(self, n_nodes: int, feat_dim: int,
+                 dtype=np.float32) -> None:
+        self.n_nodes = int(n_nodes)
+        self.feat_dim = int(feat_dim)
+        self.dtype = np.dtype(dtype)
+        self.gather_calls = 0
+        self.bytes_gathered = 0
+        self._sealed = False
+
+    # -- ndarray facade (what dataset.features consumers rely on) -----------
+    @property
+    def shape(self) -> tuple:
+        return (self.n_nodes, self.feat_dim)
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_nodes * self.feat_dim * self.dtype.itemsize
+
+    def __len__(self) -> int:
+        return self.n_nodes
+
+    def __getitem__(self, idx) -> np.ndarray:
+        """Fancy row indexing == a counted gather (the assemble_batch
+        clamp-index path lands here unchanged)."""
+        return self.gather(idx)
+
+    # -- reads ---------------------------------------------------------------
+    def gather(self, indices) -> np.ndarray:
+        """Copy the given rows out of the store: ``[len(indices), d]``.
+
+        Every call is counted (``gather_calls``/``bytes_gathered``) — this
+        is the host/disk traffic the staged pipeline overlaps and the
+        hot-vertex cache exists to avoid.
+        """
+        idx = np.asarray(indices, dtype=np.int64)
+        out = self._rows(idx)
+        self.gather_calls += 1
+        self.bytes_gathered += out.nbytes
+        return out
+
+    def as_array(self) -> np.ndarray:
+        """The full dense matrix (tests / small stores only — defeats the
+        purpose at scale)."""
+        return self._rows(np.arange(self.n_nodes, dtype=np.int64))
+
+    def _rows(self, idx: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- writes (chunked, for out-of-core generation) ------------------------
+    @classmethod
+    def create(cls, n_nodes: int, feat_dim: int, dtype=np.float32,
+               **kwargs) -> "FeatureStore":
+        """An empty writable store; fill with :meth:`write_chunk`, then
+        :meth:`seal`."""
+        raise NotImplementedError
+
+    def write_chunk(self, start: int, rows: np.ndarray) -> None:
+        """Write ``rows`` at row offset ``start``.  Chunked generation
+        never holds more than one chunk in RAM."""
+        raise NotImplementedError
+
+    def seal(self) -> "FeatureStore":
+        """Finish writing; the store becomes read-only.  Returns self."""
+        self._sealed = True
+        return self
+
+    def _check_write(self, start: int, rows: np.ndarray) -> None:
+        if self._sealed:
+            raise ValueError(f"{self.name} store is sealed (read-only); "
+                             "write_chunk is only valid before seal()")
+        if rows.shape[1:] != (self.feat_dim,):
+            raise ValueError(f"chunk width {rows.shape[1:]} != feat_dim "
+                             f"({self.feat_dim},)")
+        if start < 0 or start + len(rows) > self.n_nodes:
+            raise ValueError(f"chunk [{start}, {start + len(rows)}) out of "
+                             f"range for {self.n_nodes} rows")
+
+    @classmethod
+    def from_array(cls, features: np.ndarray, *, chunk_rows: int = 65536,
+                   **kwargs) -> "FeatureStore":
+        """Wrap an existing dense matrix (written through the chunked
+        writer, so the mmap backend streams it to disk)."""
+        features = np.asarray(features)
+        store = cls.create(features.shape[0], features.shape[1],
+                           dtype=features.dtype, **kwargs)
+        for s in range(0, features.shape[0], chunk_rows):
+            store.write_chunk(s, features[s:s + chunk_rows])
+        return store.seal()
+
+    def close(self) -> None:
+        """Release backing resources (files for mmap).  Idempotent."""
+
+    def __enter__(self) -> "FeatureStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+_STORES: Dict[str, type] = {}
+
+
+def register_store(name: str) -> Callable:
+    """Class decorator: register a :class:`FeatureStore` backend (the
+    same pluggable contract as ``engine.register_format`` — stores are
+    registered as classes because each instance binds one matrix)."""
+    def deco(cls):
+        cls.name = name
+        _STORES[name] = cls
+        return cls
+    return deco
+
+
+def get_store(name: str) -> type:
+    try:
+        return _STORES[name]
+    except KeyError:
+        raise ValueError(f"unknown feature store {name!r}; registered "
+                         f"stores: {sorted(_STORES)}") from None
+
+
+def available_stores() -> List[str]:
+    return sorted(_STORES)
+
+
+@register_store("host")
+class HostStore(FeatureStore):
+    """Host-RAM backend: one contiguous ndarray — the software stand-in
+    for the paper's pinned host staging buffers.  Features never become a
+    device array; only gathered frontier rows do."""
+
+    def __init__(self, n_nodes: int, feat_dim: int, dtype=np.float32,
+                 data: Optional[np.ndarray] = None) -> None:
+        super().__init__(n_nodes, feat_dim, dtype)
+        self._data = data if data is not None \
+            else np.empty((self.n_nodes, self.feat_dim), self.dtype)
+
+    @classmethod
+    def create(cls, n_nodes: int, feat_dim: int, dtype=np.float32,
+               **kwargs) -> "HostStore":
+        return cls(n_nodes, feat_dim, dtype)
+
+    def write_chunk(self, start: int, rows: np.ndarray) -> None:
+        self._check_write(start, rows)
+        self._data[start:start + len(rows)] = rows
+
+    def _rows(self, idx: np.ndarray) -> np.ndarray:
+        return self._data[idx]
+
+
+@register_store("mmap")
+class MmapStore(FeatureStore):
+    """Memory-mapped ``.npy`` backend — features live on disk; the OS
+    page cache is the only RAM they occupy.  The ``.npy`` header carries
+    shape/dtype, so a store is a single self-describing file that
+    ``MmapStore.open(path)`` reattaches to.
+
+    Created without a path, the store owns a tempfile and unlinks it on
+    :meth:`close`.
+    """
+
+    def __init__(self, mmap: np.memmap, path: str,
+                 owns_path: bool = False) -> None:
+        super().__init__(mmap.shape[0], mmap.shape[1], mmap.dtype)
+        self._mmap: Optional[np.memmap] = mmap
+        self.path = path
+        self._owns_path = owns_path
+
+    @classmethod
+    def create(cls, n_nodes: int, feat_dim: int, dtype=np.float32,
+               path: Optional[str] = None, **kwargs) -> "MmapStore":
+        owns = path is None
+        if owns:
+            fd, path = tempfile.mkstemp(suffix=".npy",
+                                        prefix="featurestore-")
+            os.close(fd)
+        mm = np.lib.format.open_memmap(path, mode="w+", dtype=np.dtype(dtype),
+                                       shape=(int(n_nodes), int(feat_dim)))
+        return cls(mm, path, owns_path=owns)
+
+    @classmethod
+    def open(cls, path: str) -> "MmapStore":
+        store = cls(np.lib.format.open_memmap(path, mode="r"), path)
+        store._sealed = True
+        return store
+
+    def write_chunk(self, start: int, rows: np.ndarray) -> None:
+        self._check_write(start, rows)
+        self._mmap[start:start + len(rows)] = rows
+
+    def seal(self) -> "MmapStore":
+        """Flush and reopen read-only — a sealed store can be shared
+        across processes via its path."""
+        self._mmap.flush()
+        self._mmap = np.lib.format.open_memmap(self.path, mode="r")
+        return super().seal()
+
+    def _rows(self, idx: np.ndarray) -> np.ndarray:
+        # fancy indexing on a memmap reads only the touched pages and
+        # returns a real in-RAM ndarray — the "zero-copy gather" analogue:
+        # transfer is proportional to the frontier, never to n_nodes
+        return np.asarray(self._mmap[idx])
+
+    def close(self) -> None:
+        if self._mmap is not None:
+            if not self._sealed:
+                self._mmap.flush()
+            self._mmap = None
+        if self._owns_path and self.path and os.path.exists(self.path):
+            os.unlink(self.path)
+            self._owns_path = False
+
+    def __del__(self):  # best-effort tempfile cleanup
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass

@@ -50,7 +50,10 @@ DATASET_STATS: Dict[str, DatasetStats] = {
 class GraphDataset:
     stats: DatasetStats
     graph: CSRGraph               # symmetrized CSR (both directions present)
-    features: np.ndarray          # [n, d] float32
+    #: [n, d] float32 — a dense ndarray (in-memory path) or a
+    #: repro.featurestore.FeatureStore (out-of-core path); both share the
+    #: shape/dtype/fancy-row-indexing surface every consumer relies on
+    features: object
     labels: np.ndarray            # [n] int32 or [n, c] float32 (multilabel)
     scale: float
 
@@ -73,11 +76,24 @@ def _chung_lu_edges(n: int, target_edges: int, alpha: float,
 
 
 def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
-                 feat_dim: Optional[int] = None) -> GraphDataset:
+                 feat_dim: Optional[int] = None, features: str = "dense",
+                 store_path: Optional[str] = None,
+                 chunk_rows: int = 65536) -> GraphDataset:
     """Instantiate a synthetic stand-in for one of the paper's datasets.
 
     ``scale`` multiplies node and edge counts (density preserved);
     ``feat_dim`` overrides the feature width (tests use small dims).
+
+    ``features`` picks where the feature matrix lives: ``"dense"`` (an
+    in-RAM ndarray, the default), or a registered
+    :mod:`repro.featurestore` backend name — ``"store"`` (alias for
+    ``"host"``) or ``"mmap"`` (a memory-mapped file at ``store_path``, or
+    a self-cleaning tempfile).  Store-backed features are generated in
+    ``chunk_rows``-row chunks through the store's writer, so a matrix far
+    beyond RAM never materializes — and because the generator stream is
+    consumed element-sequentially either way, the chunked rows are
+    BIT-IDENTICAL to the dense path at the same seed (test-pinned), as
+    are the labels drawn after them.
     """
     stats = DATASET_STATS[name]
     rng = np.random.default_rng(seed)
@@ -89,10 +105,22 @@ def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
     s2 = np.concatenate([src, dst])
     d2 = np.concatenate([dst, src])
     graph = csr_from_edges(s2, d2, n)
-    features = rng.standard_normal((n, d), dtype=np.float32) * 0.1
+    if features == "dense":
+        feats = rng.standard_normal((n, d), dtype=np.float32) * 0.1
+    else:
+        from repro.featurestore import get_store
+
+        backend = "host" if features == "store" else features
+        kwargs = {"path": store_path} if backend == "mmap" else {}
+        store = get_store(backend).create(n, d, dtype=np.float32, **kwargs)
+        for s in range(0, n, chunk_rows):
+            c = min(chunk_rows, n - s)
+            store.write_chunk(
+                s, rng.standard_normal((c, d), dtype=np.float32) * 0.1)
+        feats = store.seal()
     if stats.multilabel:
         labels = (rng.random((n, stats.n_classes)) < 0.05).astype(np.float32)
     else:
         labels = rng.integers(0, stats.n_classes, size=n).astype(np.int32)
-    return GraphDataset(stats=stats, graph=graph, features=features,
+    return GraphDataset(stats=stats, graph=graph, features=feats,
                         labels=labels, scale=scale)

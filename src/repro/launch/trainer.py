@@ -41,9 +41,11 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.gcn_paper import FANOUTS
-from repro.data import GraphBatchPipeline, Prefetcher
+from repro.data import (GraphBatchPipeline, Prefetcher, StagedPrefetcher,
+                        gather_features)
 from repro.distributed.gcn_train import init_params
 from repro.engine import Engine, EngineConfig
+from repro.featurestore import FeatureStore, HotVertexCache, get_store
 from repro.graph import GraphDataset, NeighborSampler, make_dataset
 
 
@@ -63,6 +65,23 @@ class Trainer:
     input_pipeline: ``"prefetch"`` (background thread, depth
         ``prefetch_depth``) or ``"sync"`` (host work inline on the step
         path — the A/B baseline).
+    feature_store: where node features live.  ``None``/``"device"`` keeps
+        the in-memory path (unless the dataset itself is store-backed); a
+        registered backend name (``"host"``, ``"mmap"``, …) wraps the
+        dataset's dense features into that out-of-core store; a
+        :class:`~repro.featurestore.FeatureStore` instance is used as-is.
+        With a store, only each batch's frontier rows stream to the
+        device, and ``input_pipeline="prefetch"`` becomes the STAGED
+        chain sample → gather → layout → place (each stage on its own
+        thread), so the store's gather latency for batch *i+2* hides
+        under batch *i+1*'s layout build and batch *i*'s device step.
+    cache_capacity: rows in the degree-keyed hot-vertex cache in front of
+        the store (0 disables); ``cache_pinned`` of them pin the
+        top-degree vertices (default: half), the rest are LRU.
+    device_budget_bytes: simulated per-device feature-memory budget — a
+        DENSE feature matrix over this size refuses to train (pass a
+        ``feature_store`` instead); store-backed features are exempt, as
+        only frontier rows ever occupy device memory.
     pad_multiple: sampler node-count padding.  Coarser padding collapses
         the per-batch ``dims`` signatures so the jitted step re-traces
         rarely; must be a multiple of ``n_cores`` (defaults to
@@ -79,6 +98,10 @@ class Trainer:
                  input_pipeline: str = "prefetch", prefetch_depth: int = 2,
                  pad_multiple: Optional[int] = None,
                  val_batches: int = 2,
+                 feature_store: Union[None, str, FeatureStore] = None,
+                 cache_capacity: int = 0,
+                 cache_pinned: Optional[int] = None,
+                 device_budget_bytes: Optional[int] = None,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  log_every: int = 0):
         if input_pipeline not in ("prefetch", "sync"):
@@ -110,6 +133,37 @@ class Trainer:
         if isinstance(dataset, str):
             dataset = make_dataset(dataset, scale=scale, feat_dim=feat_dim)
         self.dataset = dataset
+        # -- feature residency: dense on-device vs out-of-core store ---------
+        self._owned_store = False
+        feats = dataset.features
+        store: Optional[FeatureStore] = None
+        if isinstance(feature_store, FeatureStore):
+            store = feature_store
+        elif isinstance(feats, FeatureStore):
+            # the dataset was generated out-of-core — train from its store
+            # regardless of the flag (densifying it would defeat the point)
+            store = feats
+        elif feature_store not in (None, "device"):
+            # wrap the dense matrix into the named backend through the
+            # chunked writer (mmap streams it to disk chunk by chunk)
+            store = get_store(feature_store).from_array(np.asarray(feats))
+            self._owned_store = True
+        if device_budget_bytes is not None and store is None \
+                and feats.nbytes > device_budget_bytes:
+            raise ValueError(
+                f"dense features are {feats.nbytes} bytes — over the "
+                f"device_budget_bytes={device_budget_bytes} budget; pass "
+                "feature_store='host' or 'mmap' so only each batch's "
+                "frontier rows ever occupy device memory")
+        self.store = store
+        self.cache: Optional[HotVertexCache] = None
+        if store is not None and cache_capacity > 0:
+            indptr = dataset.graph.indptr
+            self.cache = HotVertexCache(store, indptr[1:] - indptr[:-1],
+                                        cache_capacity, pinned=cache_pinned)
+        self._gather_src = self.cache if self.cache is not None else store
+        self.feature_mode = "device" if store is None \
+            else getattr(store, "name", "custom")
         if mesh is None:
             # topology-aware construction: the engine's interconnect
             # validates the core count before any device state is touched
@@ -138,11 +192,23 @@ class Trainer:
         self.sampler = NeighborSampler(dataset.graph, fanouts=fanouts,
                                        pad_multiple=pad, seed=seed)
         self.pipeline = GraphBatchPipeline(dataset, self.sampler,
-                                           batch_size, seed=seed)
+                                           batch_size, seed=seed,
+                                           defer_gather=store is not None)
         self._nnz_pad = self.sampler.static_nnz(batch_size)
-        self.fetcher = Prefetcher(self.pipeline, prepare=self._prepare,
-                                  depth=prefetch_depth) \
-            if input_pipeline == "prefetch" else None
+        if input_pipeline != "prefetch":
+            self.fetcher = None
+        elif store is not None:
+            # staged chain: batch i+2's store gather hides under batch
+            # i+1's layout build, which hides under batch i's device step
+            self.fetcher = StagedPrefetcher(
+                self.pipeline,
+                [("gather", self._gather_stage),
+                 ("layout", self.bundle.prepare_batch),
+                 ("place", self.bundle.commit_batch)],
+                depth=prefetch_depth)
+        else:
+            self.fetcher = Prefetcher(self.pipeline, prepare=self._prepare,
+                                      depth=prefetch_depth)
         # model: one GCN layer per sampled hop, hidden width between
         feat = dataset.features.shape[1]
         dims = [feat] + [hidden] * (len(fanouts) - 1) \
@@ -171,11 +237,21 @@ class Trainer:
         return self.bundle.commit_batch(
             self.bundle.prepare_batch(mb, feats, labels))
 
+    def _gather_stage(self, mb, labels):
+        """The store stage of the staged chain: frontier rows out of the
+        feature store, through the hot-vertex cache when one is enabled."""
+        feats = gather_features(self._gather_src, mb.input_nodes,
+                                self.dataset.graph.n_nodes)
+        return mb, feats, labels
+
     def _next_batch(self) -> Dict[str, Any]:
         if self.fetcher is not None:
             return next(self.fetcher)
         t0 = time.perf_counter()
-        batch = self._prepare(*next(self.pipeline))
+        item = next(self.pipeline)
+        if self.store is not None:     # defer_gather stream: (mb, labels)
+            item = self._gather_stage(*item)
+        batch = self._prepare(*item)
         self._sync_stall_s += time.perf_counter() - t0
         self._sync_steps += 1
         return batch
@@ -248,6 +324,11 @@ class Trainer:
     def close(self) -> None:
         if self.fetcher is not None:
             self.fetcher.close()
+        if self._owned_store and self.store is not None:
+            # only stores the Trainer created (from_array wrapping) are
+            # closed here — a dataset-owned or caller-passed store may be
+            # shared and outlives this Trainer
+            self.store.close()
         if self.mgr is not None:
             self.mgr.wait()
 
@@ -320,6 +401,7 @@ class Trainer:
                                "requested_spec": self.requested_spec,
                                "n_cores": self.n_cores,
                                "input_pipeline": self.input_pipeline,
+                               "feature_store": self.feature_mode,
                                "loss_history": [], "val_acc": [],
                                "epoch_s": [], "steps_per_s": [],
                                "host_stall_s_per_step": []}
@@ -355,6 +437,15 @@ class Trainer:
         out["wall_s"] = time.time() - t_all
         out["global_step"] = self.global_step
         out["params"] = self.params
+        if self.store is not None:
+            out["gather_calls"] = int(self.store.gather_calls)
+            out["gather_bytes"] = int(self.store.bytes_gathered)
+            if self.cache is not None:
+                out["cache"] = self.cache.stats()
+        if isinstance(self.fetcher, StagedPrefetcher):
+            # last epoch's per-stage stalls (stage k's stall = time it
+            # waited on stage k-1 — where the chain is bottlenecked)
+            out["stage_stall_s_per_step"] = self.fetcher.stage_stalls()
         return out
 
 
@@ -376,6 +467,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--input-pipeline", default="prefetch",
                     choices=["prefetch", "sync"])
+    ap.add_argument("--feature-store", default="device",
+                    help="'device' (dense in-memory features, the default)"
+                         " or a registered featurestore backend ('host', "
+                         "'mmap') to stream frontier rows out-of-core")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="hot-vertex cache rows in front of the store "
+                         "(0 disables; needs --feature-store)")
+    ap.add_argument("--cache-pinned", type=int, default=None,
+                    help="cache rows pinned to the top-degree vertices "
+                         "(default: half the capacity)")
     ap.add_argument("--pad-multiple", type=int, default=None,
                     help="coarser sampler padding → fewer distinct dims "
                          "signatures → fewer jit re-traces")
@@ -388,11 +489,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     args = ap.parse_args(argv)
 
     def build(pipeline: str, ckpt: Optional[str]) -> Trainer:
+        fs = None if args.feature_store == "device" else args.feature_store
         return Trainer(args.spec, args.dataset, n_cores=args.n_cores,
                        scale=args.scale, feat_dim=args.feat_dim,
                        hidden=args.hidden, batch_size=args.batch_size,
                        lr=args.lr, seed=args.seed, input_pipeline=pipeline,
                        pad_multiple=args.pad_multiple,
+                       feature_store=fs, cache_capacity=args.cache_capacity,
+                       cache_pinned=args.cache_pinned,
                        ckpt_dir=ckpt, ckpt_every=0, log_every=10)
 
     if args.ckpt_restart:
@@ -412,9 +516,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     zip(ref["loss_history"][mid:], out["loss_history"]))
         print(f"resume drift vs uninterrupted: {drift:.2e}")
         assert drift <= 1e-6, drift
+        cache = out.get("cache")
+        extra = (f"  store={out['feature_store']} "
+                 f"cache_hit_rate={cache['hit_rate']:.2f}"
+                 if cache else f"  store={out['feature_store']}")
         print(f"OK spec={args.spec} cores={args.n_cores} "
               f"steps={args.steps} (ckpt@{mid} + resume, batch-exact)  "
-              f"val_acc={out['val_acc'][-1]:.3f}")
+              f"val_acc={out['val_acc'][-1]:.3f}{extra}")
         return
 
     tr = build(args.input_pipeline, args.ckpt_dir)

@@ -130,6 +130,45 @@ def test_prefetcher_rejects_bad_depth():
         Prefetcher(_CountSource(), depth=0)
 
 
+def test_prefetcher_close_is_idempotent():
+    pf = _mk(depth=2)
+    assert next(pf) == (0,)
+    pf.close()
+    pf.close()                               # double close: a no-op
+    pf.close()
+    assert pf.source.idx == 1                # still rewound to last consumed
+    assert next(pf) == (1,)                  # and still restartable
+    pf.close()
+    # close before ever starting the producer is also fine
+    fresh = _mk()
+    fresh.close()
+    assert next(fresh) == (0,)
+    fresh.close()
+
+
+def test_prefetcher_close_after_producer_error_discards_it():
+    import time
+    from repro.data import Prefetcher
+
+    class _Boom(_CountSource):
+        def __next__(self):
+            if self.idx == 1:
+                raise RuntimeError("sampler exploded")
+            return super().__next__()
+
+    pf = Prefetcher(_Boom(), depth=1)
+    assert next(pf) == (0,)
+    time.sleep(0.3)                          # let the producer die
+    pf.close()                               # error discarded, queue drained
+    pf.close()                               # and still idempotent
+    assert pf._error is None
+    # the rewound source re-raises on the NEXT consume — the error is
+    # regenerated, never silently lost
+    with pytest.raises(RuntimeError, match="sampler exploded"):
+        next(pf)
+    pf.close()
+
+
 # ---------------------------------------------------------------------------
 # Trainer: sync == prefetch, metrics, multilabel.
 # ---------------------------------------------------------------------------
