@@ -46,7 +46,48 @@ TRACKED: Dict[str, str] = {
     # the hot-vertex cache's absorbed fraction of frontier traffic
     "feature_store.stall_reduction": "higher",
     "feature_store.cache_hit_rate": "higher",
+    # redundancy-merged ELL vs plain ELL (paired median, same stream):
+    # the smoke gates wire_bytes_reduction > 1 and loss bit-match; this
+    # tracks that the merged plan's step win doesn't erode
+    "redundancy.step_speedup": "higher",
 }
+
+# every BENCH_*.json a current benchmark produces — the ownership registry
+# behind warn_unowned_records().  Grows with each new arm; a record on disk
+# that no entry claims is an orphan (its producer was deleted or renamed)
+# and should be pruned or re-owned, not silently uploaded forever.
+KNOWN_RECORDS = {
+    "BENCH_smoke.json":          "benchmarks/run.py --smoke",
+    "BENCH_overlap.json":        "benchmarks/epoch_time.py",
+    "BENCH_input_pipeline.json": "benchmarks/epoch_time.py --input-pipeline",
+    "BENCH_feature_store.json":  "benchmarks/epoch_time.py --feature-store",
+    "BENCH_redundancy.json":     "benchmarks/epoch_time.py --redundancy",
+    "BENCH_topology.json":       "benchmarks/epoch_time.py --topology",
+    "BENCH_auto.json":           "benchmarks/epoch_time.py --auto",
+    "BENCH_autotune.json":       "repro.kernels.tune (ELL autotuner)",
+    "BENCH_planner.json":        "repro.engine.planner.autotune",
+}
+
+_warned_unowned = False
+
+
+def warn_unowned_records(directory: str = ".") -> List[str]:
+    """Names of ``BENCH_*.json`` files in ``directory`` no current
+    benchmark owns (per :data:`KNOWN_RECORDS`); prints one warning total
+    per process — the orphan list, once, not one line per run per file."""
+    global _warned_unowned
+    import glob
+    import os
+    orphans = sorted(
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(directory, "BENCH_*.json"))
+        if os.path.basename(p) not in KNOWN_RECORDS)
+    if orphans and not _warned_unowned:
+        _warned_unowned = True
+        print(f"# WARNING: {len(orphans)} BENCH record(s) with no current "
+              f"producing benchmark: {', '.join(orphans)} — prune them or "
+              "re-add a producer (see compare.KNOWN_RECORDS)")
+    return orphans
 
 
 def get_path(rec: Dict, path: str) -> Optional[float]:
@@ -116,6 +157,7 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any regression (CI default: warn only)")
     args = ap.parse_args()
+    warn_unowned_records()
     with open(args.old) as f:
         old = json.load(f)
     with open(args.new) as f:

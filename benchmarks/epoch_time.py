@@ -45,6 +45,14 @@ reference; results land in ``BENCH_topology.json``.  ``run --smoke`` gates
 ``hypercube_vs_allpairs_speedup > 1`` at 4 cores — the structured NoC must
 beat the dense crossbar reference, or the headline topology claim is dead.
 
+``--redundancy`` races the GraphACT-merged engine (``merge="redundancy"``
++ ``partition="mincom"``) against the plain ELL arm on one bit-matching
+synthetic power-law community stream — same layers, features, labels,
+initial params; results (wire-bytes reduction, aggregation FLOP reduction,
+paired-median step speedup) land in ``BENCH_redundancy.json`` and ``run
+--smoke`` gates ``loss_match`` + ``wire_bytes_reduction > 1.0`` +
+``flop_reduction > 1.0``.
+
 ``--auto`` exercises the profile-guided planner end to end: autotune every
 candidate spec on one synthetic stream (compile-and-replay, same
 paired-median child-re-exec methodology), persist the winner to
@@ -427,6 +435,194 @@ def run_overlap_arm(n_cores: int = 8, *, smoke: bool = False,
               + (f"  plan_cached={rec.get('edge_plan_cached')}"
                  if name == "ell" else "")
               + "  (paired median)")
+    print(f"# (wrote {out_path})")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# --redundancy: GraphACT-merged ELL + mincom partitioning vs plain ELL.
+# ---------------------------------------------------------------------------
+def _synthetic_powerlaw_layers(batch: int, mid: int, frontier: int,
+                               deg: int, n_cores: int, seed: int = 0):
+    """Two sampled layers of a power-law community graph (COO, deepest
+    last) — the bench graph BOTH redundancy tiers need to show a win.
+
+    Two properties are load-bearing:
+
+      * **Zipf hubs inside planted communities**: each destination draws
+        ~90% of its neighbors from its own community's source pool under a
+        zipf(1.2) rank weighting, so many rows share the same top hub
+        PAIRS — the structural sharing :func:`mine_pair_redundancy`
+        factors into virtual vertices.  Edge weights are GCN symmetric
+        normalization (``1/sqrt(d_dst * d_src)``) — the normalization
+        makes every shared pair's coefficients proportional across rows
+        (ratio ``sqrt(d_v/d_u)``), which is what lets structural sharing
+        actually merge; independent random weights would yield zero.
+      * **Shuffled node labels in the deeper spaces**: community
+        membership is a random permutation of ids for the mid/frontier
+        spaces (space 0 keeps naive blocks — the batch placement mincom
+        must respect), so the naive contiguous split cuts ~uniform
+        cross-core traffic while ``mincom`` can recover the planted
+        communities and cut it.  10% of edges rewire uniformly — the
+        irreducible cross traffic.
+    """
+    from repro.graph.coo import from_edges
+
+    rng = np.random.default_rng(seed)
+    comm = [np.minimum(np.arange(batch) // max(batch // n_cores, 1),
+                       n_cores - 1),
+            rng.permutation(np.arange(mid) % n_cores),
+            rng.permutation(np.arange(frontier) % n_cores)]
+
+    def layer(n_dst, n_src, cd, cs):
+        rows_l, cols_l = [], []
+        for c in range(n_cores):
+            dsts = np.where(cd == c)[0]
+            pool = rng.permutation(np.where(cs == c)[0])
+            w = 1.0 / np.arange(1.0, pool.size + 1.0) ** 1.2
+            w /= w.sum()
+            e_c = dsts.size * deg
+            cols_c = pool[rng.choice(pool.size, e_c, p=w)]
+            cross = rng.random(e_c) < 0.1
+            cols_c[cross] = rng.integers(0, n_src, int(cross.sum()))
+            rows_l.append(np.repeat(dsts, deg))
+            cols_l.append(cols_c)
+        rows = np.concatenate(rows_l).astype(np.int64)
+        cols = np.concatenate(cols_l).astype(np.int64)
+        # collapse duplicate (r,c) draws, then weight by GCN symmetric
+        # normalization over the deduped structure
+        keep = np.unique(rows * n_src + cols)
+        rows, cols = keep // n_src, keep % n_src
+        d_dst = np.bincount(rows, minlength=n_dst).astype(np.float64)
+        d_src = np.bincount(cols, minlength=n_src).astype(np.float64)
+        vals = (1.0 / np.sqrt(np.maximum(d_dst[rows] * d_src[cols], 1.0))
+                ).astype(np.float32)
+        return from_edges(rows, cols, vals, n_dst, n_src)
+
+    return [layer(batch, mid, comm[0], comm[1]),
+            layer(mid, frontier, comm[1], comm[2])]
+
+
+def measured_redundancy(n_cores: int = 4, batch: int = 256, mid: int = 1024,
+                        frontier: int = 2048, feat: int = 128,
+                        hidden: int = 128, deg: int = 12, n_steps: int = 3,
+                        n_trials: int = 12, seed: int = 0) -> Dict:
+    """The merged arm (``merge="redundancy"`` + ``partition="mincom"``) vs
+    the plain ELL engine on one bit-matching power-law stream.
+
+    Both arms consume the SAME layers, features, labels and initial params;
+    the merged arm's mincom relabeling keeps space 0 (batch/labels/logits)
+    identity, so the first-step losses must agree to ≤1e-5 — reduction-
+    order roundoff only.  Reported per arm: the measured exchange
+    ``wire_bytes`` from the engine's plan report (post-merge row accounting
+    through ``Topology.plan``), the aggregation FLOP reduction from the
+    GraphACT merge stats, and the paired-median step-time ratio (arms run
+    back-to-back per trial — host-load noise is common-mode, as in
+    :func:`measured_overlap`).
+    """
+    from repro.distributed.gcn_train import init_params
+    from repro.engine import Engine, EngineConfig
+
+    if len(jax.devices()) < n_cores:
+        raise RuntimeError(
+            f"need {n_cores} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count")
+    mesh = jax.make_mesh((n_cores,), ("model",))
+    layers = _synthetic_powerlaw_layers(batch, mid, frontier, deg, n_cores,
+                                        seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal((frontier, feat)).astype(np.float32)
+    labels = rng.integers(0, 16, batch).astype(np.int32)
+
+    class _MB:                        # duck-typed MiniBatch: layers only
+        pass
+
+    _MB.layers = layers
+    arms = [("base", EngineConfig.from_spec("ell+pipelined+hypercube")),
+            ("merged", EngineConfig.from_spec(
+                "ell+pipelined+hypercube+mincom", merge="redundancy"))]
+    out: Dict = {"n_cores": n_cores, "batch": batch, "mid": mid,
+                 "frontier": frontier, "feat": feat, "hidden": hidden,
+                 "deg": deg, "n_steps": n_steps, "n_trials": n_trials,
+                 "base_spec": arms[0][1].spec, "merged_spec": arms[1][1].spec}
+    runs = {}
+    for name, cfg in arms:
+        bundle = Engine(cfg).build(mesh)
+        b = bundle.shard_batch(_MB(), x, labels)
+        params = init_params(jax.random.PRNGKey(seed),
+                             [(feat, hidden), (hidden, 16)])
+        step = bundle.train_step_fn(b["dims"])
+        _, loss = step(params, b)     # compile; first-step loss for the
+        jax.block_until_ready(loss)   # bit-match gate (same params0)
+        runs[name] = {"step": step, "batch": b, "params": params,
+                      "loss": float(loss), "report": b["report"],
+                      "times": []}
+    for _ in range(n_trials):
+        for arm in runs.values():
+            t0 = time.perf_counter()
+            params, loss = arm["params"], None
+            for _ in range(n_steps):
+                params, loss = arm["step"](params, arm["batch"])
+            jax.block_until_ready(loss)
+            arm["times"].append((time.perf_counter() - t0) / n_steps)
+    for name, arm in runs.items():
+        out[f"loss_{name}"] = arm["loss"]
+        out[f"s_per_step_{name}"] = min(arm["times"])
+        out[f"wire_bytes_{name}"] = arm["report"]["wire_bytes"]
+    out["loss_match"] = abs(out["loss_base"] - out["loss_merged"]) < 1e-5
+    out["wire_bytes_reduction"] = (out["wire_bytes_base"]
+                                   / max(out["wire_bytes_merged"], 1.0))
+    mrep = runs["merged"]["report"]
+    out["flop_reduction"] = mrep["flop_reduction"]
+    out["virtual_vertices"] = mrep["virtual_vertices"]
+    out["pair_coverage"] = mrep["pair_coverage"]
+    ratios = sorted(b / m for b, m in zip(runs["base"]["times"],
+                                          runs["merged"]["times"]))
+    out["trial_ratios"] = [round(r, 3) for r in ratios]
+    out["step_speedup"] = ratios[len(ratios) // 2]     # paired median
+    return out
+
+
+def run_redundancy_arm(n_cores: int = 4, *, smoke: bool = False,
+                       out_path: str = "BENCH_redundancy.json") -> Dict:
+    """Re-exec :func:`measured_redundancy` under a forced multi-device
+    backend (XLA_FLAGS must precede the jax import) and write ``out_path``.
+    """
+    kwargs = {"n_cores": n_cores}
+    if smoke:
+        kwargs.update(batch=128, mid=256, frontier=512, feat=64, hidden=64,
+                      deg=8, n_steps=3, n_trials=8)
+    child = (
+        "import json, sys; sys.path.insert(0, '.');"
+        "from benchmarks.epoch_time import measured_redundancy;"
+        f"print(json.dumps(measured_redundancy(**{kwargs!r})))"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_cores} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"redundancy arm failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"## redundancy arm ({n_cores} simulated cores): "
+          f"{rec['base_spec']} vs {rec['merged_spec']} (merge=redundancy)")
+    print(f"# wire bytes/core: {rec['wire_bytes_base']:.3g} -> "
+          f"{rec['wire_bytes_merged']:.3g}  "
+          f"({rec['wire_bytes_reduction']:.2f}x reduction)")
+    print(f"# aggregation FLOPs: {rec['flop_reduction']:.3f}x reduction  "
+          f"({rec['virtual_vertices']:.0f} virtual vertices, "
+          f"pair coverage {rec['pair_coverage']:.2f})")
+    print(f"# step time: {rec['s_per_step_base']:.4f}s -> "
+          f"{rec['s_per_step_merged']:.4f}s  "
+          f"(paired-median speedup {rec['step_speedup']:.3f}x)  "
+          f"loss_match={rec['loss_match']}")
     print(f"# (wrote {out_path})")
     return rec
 
@@ -1059,6 +1255,11 @@ def main() -> None:
                          "BENCH_planner.json, and race Engine('auto') "
                          "against the best manual arm (writes "
                          "BENCH_auto.json)")
+    ap.add_argument("--redundancy", action="store_true",
+                    help="race the GraphACT-merged ELL engine "
+                         "(merge=redundancy + mincom partitioning) against "
+                         "the plain ELL arm on one bit-matching power-law "
+                         "stream (writes BENCH_redundancy.json)")
     args = ap.parse_args()
 
     ran = False
@@ -1073,6 +1274,10 @@ def main() -> None:
     if args.auto:
         run_auto_arm(min(args.cores, 4) if args.smoke else args.cores,
                      smoke=args.smoke)
+        ran = True
+    if args.redundancy:
+        run_redundancy_arm(min(args.cores, 4) if args.smoke else args.cores,
+                           smoke=args.smoke)
         ran = True
     if args.feature_store:
         run_feature_store_arm(min(args.cores, 4) if args.smoke

@@ -12,6 +12,9 @@ runs the planner's auto arm — spec autotune persisted to
 manual spec (``BENCH_auto.json``) — measures feature residency (dense
 device-resident vs the ``host``/``mmap`` feature stores under sync vs
 staged-prefetch input pipelines, ``BENCH_feature_store.json``),
+races the GraphACT-merged ELL engine (``merge="redundancy"`` + ``mincom``
+partitioning) against the plain ELL arm on a bit-matching power-law
+stream (``BENCH_redundancy.json``),
 sanity-runs the block-layout and ELL SpMM kernels against their oracle,
 diffs the fresh record against the previous ``BENCH_smoke.json``
 (warn-only), and writes ``BENCH_smoke.json`` + ``BENCH_overlap.json`` for
@@ -56,7 +59,8 @@ def smoke() -> int:
           f"block+pipelined / ell+pipelined (toy)\n{'=' * 72}")
     from benchmarks.epoch_time import (run_auto_arm, run_feature_store_arm,
                                        run_input_pipeline_arm,
-                                       run_overlap_arm, run_topology_arm)
+                                       run_overlap_arm, run_redundancy_arm,
+                                       run_topology_arm)
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\ntopology sweep — every registered interconnect "
@@ -74,6 +78,10 @@ def smoke() -> int:
     print(f"\n{'=' * 72}\nfeature store — device vs host vs mmap, "
           f"sync vs staged prefetch (toy)\n{'=' * 72}")
     rec["feature_store"] = run_feature_store_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\nredundancy — GraphACT-merged ELL + mincom "
+          f"partitioning vs plain ELL (toy)\n{'=' * 72}")
+    rec["redundancy"] = run_redundancy_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\nSpMM kernels vs oracle (interpret)\n{'=' * 72}")
     import numpy as np
@@ -126,6 +134,7 @@ def smoke() -> int:
     tp = rec["topology"]
     au = rec["auto"]
     fs = rec["feature_store"]
+    rd = rec["redundancy"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -158,7 +167,15 @@ def smoke() -> int:
           # gather, and the hot-vertex cache must actually absorb traffic
           and fs["prefetch_reduces_stall"]
           and fs["loss_match"]
-          and fs["cache_hit_rate"] > 0)
+          and fs["cache_hit_rate"] > 0
+          # the redundancy gate: the GraphACT merge + mincom partitioning
+          # must bit-match the plain ELL stream while actually cutting
+          # BOTH measured exchange bytes and aggregation FLOPs on the
+          # power-law bench graph — a merge that stops finding pairs (or a
+          # partitioner that stops beating the naive split) fails here
+          and rd["loss_match"]
+          and rd["wire_bytes_reduction"] > 1.0
+          and rd["flop_reduction"] > 1.0)
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -404,12 +404,30 @@ class EllEdgeShards:
     (rows = sender-local source slots, columns = global error rows).
     Bucket capacities and per-bucket row counts are shared across senders so
     every device sees identical shapes.  Built once per graph and cached.
+
+    Redundancy-merged shards (``merge="redundancy"``) additionally carry
+    the stacked ``vv_*``/``vvt_*`` pre-pass tables over a shared
+    virtual-vertex pad (max across senders), and ``merge_stats`` sums the
+    per-sender mining stats.
     """
 
     tables: Dict
     n_dst: int
     n_src: int
     n_cores: int
+    merge_stats: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_virtual(self) -> int:
+        return int(self.merge_stats.get("n_virtual", 0))
+
+    @property
+    def pair_coverage(self) -> float:
+        return float(self.merge_stats.get("pair_coverage", 0.0))
+
+    @property
+    def flop_reduction(self) -> float:
+        return float(self.merge_stats.get("flop_reduction", 1.0))
 
     @property
     def dst_per_core(self) -> int:
@@ -448,7 +466,8 @@ def _stack_sender_tables(flats, n_rows: int, n_cols: int, caps) -> Dict:
     }
 
 
-def shard_edges_ell(coo: COO, n_cores: int, caps=None) -> EllEdgeShards:
+def shard_edges_ell(coo: COO, n_cores: int, caps=None,
+                    merge: str = "dedup") -> EllEdgeShards:
     """Partition a (padded) COO into per-sender pre-reduced ELL plans.
 
     Same source-core striping as :func:`shard_edges`, but each sender's
@@ -458,10 +477,20 @@ def shard_edges_ell(coo: COO, n_cores: int, caps=None) -> EllEdgeShards:
     becomes a gather + degree-axis reduction with NO segment-sum scatter,
     forward and backward.  Built once per (graph, mesh) and cached on the
     COO's identity — per-step host edge prep disappears.
+
+    ``merge="redundancy"`` runs
+    :func:`repro.kernels.edgeplan.mine_pair_redundancy` per sender AFTER
+    the within-block merge, so destination rows on every core gather from
+    (original ∪ virtual) sender-local sources.  Virtual ids are padded to
+    the max across senders so the stacked tables stay shape-aligned;
+    senders with fewer virtual vertices leave the pad rows edge-free
+    (their ``inv`` fills zeros).  Degrades to the plain shards when no
+    sender mines a pair.
     """
     from repro.core.blockmsg import sender_merge_flat
     from repro.kernels import edgeplan
 
+    edgeplan.validate_merge(merge)
     if caps is None:
         from repro.kernels.tune import get_config
         caps = get_config()["caps"]
@@ -471,18 +500,50 @@ def shard_edges_ell(coo: COO, n_cores: int, caps=None) -> EllEdgeShards:
         blocked = block_partition(coo, n_cores)
         spc = blocked.src_per_core
         fwd_flats = [sender_merge_flat(blocked, j) for j in range(n_cores)]
+        merge_stats: Dict = {}
+        vv_keys: Dict = {}
+        if merge == "redundancy":
+            mines = [edgeplan.mine_pair_redundancy(r, c, v, coo.n_dst, spc)
+                     for (r, c, v) in fwd_flats]
+            n_vv_pad = max(m.n_virtual for m in mines)
+            if n_vv_pad:
+                ext = spc + n_vv_pad
+                fwd_flats = [(m.rows, m.cols, m.vals) for m in mines]
+                vv_flats = [m.vv_flat() for m in mines]
+                vvt_flats = [(c, r, v) for (r, c, v) in vv_flats]
+                vv = _stack_sender_tables(vv_flats, n_vv_pad, spc, caps)
+                vvt = _stack_sender_tables(vvt_flats, spc, n_vv_pad, caps)
+                vv_keys = {"vv_cols": vv["cols"], "vv_vals": vv["vals"],
+                           "vv_inv": vv["inv"], "vvt_cols": vvt["cols"],
+                           "vvt_vals": vvt["vals"], "vvt_inv": vvt["inv"]}
+                eb = sum(m.stats["edges_before"] for m in mines)
+                ea = sum(m.stats["edges_after"] for m in mines)
+                nv = sum(m.stats["n_virtual"] for m in mines)
+                pu = sum(m.stats["pair_uses"] for m in mines)
+                merge_stats = {
+                    "edges_before": eb, "edges_after": ea, "n_virtual": nv,
+                    "pair_uses": pu,
+                    "pair_coverage": 2.0 * pu / max(eb, 1),
+                    "flop_reduction": eb / max(ea + 2 * nv, 1),
+                }
+            else:
+                ext = spc
+        else:
+            ext = spc
         bwd_flats = [(c, r, v) for (r, c, v) in fwd_flats]
-        fwd = _stack_sender_tables(fwd_flats, coo.n_dst, spc, caps)
-        bwd = _stack_sender_tables(bwd_flats, spc, coo.n_dst, caps)
+        fwd = _stack_sender_tables(fwd_flats, coo.n_dst, ext, caps)
+        bwd = _stack_sender_tables(bwd_flats, ext, coo.n_dst, caps)
         tables = dict(fwd)
         tables["t_cols"] = bwd["cols"]
         tables["t_vals"] = bwd["vals"]
         tables["t_inv"] = bwd["inv"]
+        tables.update(vv_keys)
         return EllEdgeShards(tables=tables, n_dst=coo.n_dst,
-                             n_src=coo.n_src, n_cores=n_cores)
+                             n_src=coo.n_src, n_cores=n_cores,
+                             merge_stats=merge_stats)
 
     return edgeplan.cached(
-        edgeplan.coo_key(coo, "ell-shards", n_cores, caps_key),
+        edgeplan.coo_key(coo, "ell-shards", n_cores, caps_key, merge),
         (coo.rows, coo.cols, coo.vals), _build)
 
 

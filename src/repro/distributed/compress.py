@@ -42,12 +42,41 @@ def _dim_perm(n: int, bit: int):
     return [(i, i ^ (1 << bit)) for i in range(n)]
 
 
-def compressed_psum(x: jnp.ndarray, axis_name: str, ndim: int) -> jnp.ndarray:
+def _hypercube_ndim(n_cores: int) -> int:
+    """Hypercube dimensionality for ``n_cores``, or a loud error.
+
+    The ``_dim_perm`` exchange pairs peer ``i`` with ``i ^ (1 << b)`` —
+    that wiring only exists when the core count is a power of two.  On any
+    other count the permutation would silently mis-route halves (peers
+    past the axis end wrap who-knows-where), so this fails at trace time
+    naming the topology instead.
+    """
+    if n_cores < 1 or n_cores & (n_cores - 1):
+        raise ValueError(
+            f"compressed_psum runs dimension-ordered hypercube rounds "
+            f"(peer = i ^ 2^b), which require a power-of-two core count; "
+            f"got {n_cores} cores.  Use a topology-registry exchange for "
+            f"non-hypercube meshes.")
+    return n_cores.bit_length() - 1
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, ndim: int = None, *,
+                    n_cores: int = None) -> jnp.ndarray:
     """int8 hypercube all-reduce of a flat f32 vector (call in shard_map).
 
     ``x``: [n] with n divisible by P = 2**ndim.  Returns the f32 sum over the
     axis, computed with int8 wire traffic.
+
+    Pass EITHER ``ndim`` (the hypercube dimensionality, legacy positional
+    form) or ``n_cores=`` (the mesh axis size) — the latter validates that
+    the count actually forms a hypercube and raises a ``ValueError`` naming
+    the topology on a non-power-of-two count, instead of silently
+    mis-permuting.
     """
+    if (ndim is None) == (n_cores is None):
+        raise ValueError("pass exactly one of ndim= or n_cores=")
+    if n_cores is not None:
+        ndim = _hypercube_ndim(int(n_cores))
     n_cores = 1 << ndim
     idx = jax.lax.axis_index(axis_name)
     buf = x.reshape(n_cores, -1)
@@ -81,13 +110,19 @@ def compressed_psum(x: jnp.ndarray, axis_name: str, ndim: int) -> jnp.ndarray:
     return out.reshape(-1)
 
 
-def ef_compress_grads(grads, err, axis_name: str, ndim: int):
+def ef_compress_grads(grads, err, axis_name: str, ndim: int = None, *,
+                      n_cores: int = None):
     """Error-feedback compressed all-reduce over a gradient pytree.
 
     Returns (mean_grads, new_err).  Each leaf: inject residual, quantize the
     contribution (that quantized value is what enters the fold), keep the new
-    residual locally.
+    residual locally.  ``ndim`` vs ``n_cores=`` as in
+    :func:`compressed_psum` — ``n_cores`` validates the hypercube contract.
     """
+    if (ndim is None) == (n_cores is None):
+        raise ValueError("pass exactly one of ndim= or n_cores=")
+    if n_cores is not None:
+        ndim = _hypercube_ndim(int(n_cores))
     n_cores = 1 << ndim
 
     def one(g, e):

@@ -8,12 +8,17 @@ unknown names and unsupported combinations raise ``ValueError`` listing
 the registered options, so a typo dies at config time, not three layers
 down inside ``shard_map``.
 
-Spec grammar: ``format[+schedule[+topology]]`` — ``"ell"``,
-``"ell+pipelined"``, ``"ell+pipelined+ring"``.  An omitted schedule takes
+Spec grammar: ``format[+schedule[+topology[+partition]]]`` — ``"ell"``,
+``"ell+pipelined"``, ``"ell+pipelined+ring"``,
+``"ell+pipelined+hypercube+mincom"``.  An omitted schedule takes
 the format's default; an omitted topology takes ``hypercube`` (the
-paper's NoC).  ``.spec`` is the canonical spelling and keeps the legacy
-two-part form whenever the topology is the default, so pre-topology spec
-strings, metric keys and checkpoints round-trip unchanged.
+paper's NoC); an omitted partition takes ``naive`` (contiguous
+striping).  ``.spec`` is the canonical spelling and keeps the legacy
+two- and three-part forms whenever the trailing knobs are defaults, so
+pre-topology/pre-partition spec strings, metric keys and checkpoints
+round-trip unchanged.  The ``merge`` knob (``"dedup"`` | ``"redundancy"``,
+the edge-plan merge level) is a config FIELD rather than a spec part: it
+changes the plan the kernels walk, not which engine path runs.
 
 ``"auto"`` is the one spec that is not a format name: it defers the
 format/schedule/topology choice to :mod:`repro.engine.planner`, which
@@ -52,6 +57,13 @@ class EngineConfig:
               scheme from :mod:`repro.kernels.tune`)
     block_tiles: destination tiles for the block format's single-device
               layer (distributed paths always tile per core instead)
+    partition: node→core partition quality — ``"naive"`` (contiguous
+              striping, the paper's address decode) | ``"mincom"``
+              (communication-volume-minimizing relabeling); fourth spec
+              part, omitted from ``.spec`` when default
+    merge:    edge-plan merge level — ``"dedup"`` (within-block sender
+              merge) | ``"redundancy"`` (+ GraphACT cross-row virtual
+              vertices); a field, not a spec part
     axis:     mesh axis name that plays the paper's 16-core hypercube
     lr:       SGD learning rate baked into ``train_step``
     precision: accumulation precision (``"fp32"`` only today)
@@ -60,6 +72,8 @@ class EngineConfig:
     format: str = "coo"
     schedule: Optional[str] = None
     topology: Optional[str] = None
+    partition: str = "naive"
+    merge: str = "dedup"
     n_chunks: Optional[int] = None
     caps: Caps = None
     block_tiles: int = 4
@@ -68,6 +82,10 @@ class EngineConfig:
     precision: str = "fp32"
 
     def __post_init__(self):
+        from repro.graph.partition import validate_partition
+        from repro.kernels.edgeplan import validate_merge
+        validate_partition(self.partition)
+        validate_merge(self.merge)
         if self.format == registry.AUTO_SPEC:
             if self.schedule is not None or self.topology is not None:
                 raise ValueError(
@@ -100,26 +118,30 @@ class EngineConfig:
     @classmethod
     def from_spec(cls, spec: str, **overrides) -> "EngineConfig":
         """Parse ``"ell+pipelined+ring"`` / ``"ell+pipelined"`` / ``"coo"``
-        into a validated config.
+        / ``"ell+pipelined+hypercube+mincom"`` into a validated config.
 
-        The spec is ``format[+schedule[+topology]]``; a bare format takes
-        its default schedule, an omitted topology defaults to
-        ``hypercube``.  ``overrides`` set the remaining knobs
-        (``n_chunks=4``, ``lr=0.1``, ...).
+        The spec is ``format[+schedule[+topology[+partition]]]``; a bare
+        format takes its default schedule, an omitted topology defaults to
+        ``hypercube``, an omitted partition to ``naive``.  ``overrides``
+        set the remaining knobs (``n_chunks=4``, ``lr=0.1``, ...).
         """
         parts = [p.strip() for p in spec.split("+")]
-        if not 1 <= len(parts) <= 3 or not all(parts):
+        if not 1 <= len(parts) <= 4 or not all(parts):
             raise ValueError(
                 f"bad engine spec {spec!r}: expected 'format', "
-                f"'format+schedule' or 'format+schedule+topology'; valid "
+                f"'format+schedule', 'format+schedule+topology' or "
+                f"'format+schedule+topology+partition'; valid "
                 f"specs: {registry.supported_specs()} (+ optionally one of "
-                f"{registry.available_topologies()})")
+                f"{registry.available_topologies()}, then one of "
+                f"{registry.available_partitions()})")
         kw = dict(overrides)
         kw["format"] = parts[0]
         if len(parts) >= 2:
             kw["schedule"] = parts[1]
-        if len(parts) == 3:
+        if len(parts) >= 3:
             kw["topology"] = parts[2]
+        if len(parts) == 4:
+            kw["partition"] = parts[3]
         return cls(**kw)
 
     @property
@@ -134,12 +156,17 @@ class EngineConfig:
 
         Two-part ``"format+schedule"`` when the topology is the default
         ``hypercube`` (pre-topology specs, metric keys and checkpoints
-        round-trip unchanged); ``"format+schedule+topology"`` otherwise;
-        ``"auto"`` for the planner-deferred config.
+        round-trip unchanged); ``"format+schedule+topology"`` with a
+        non-default topology; a fourth ``+partition`` part only when the
+        partition is not ``naive`` (the topology is then always spelled
+        out, default or not, so the parts stay positional); ``"auto"``
+        for the planner-deferred config.
         """
         if self.is_auto:
             return registry.AUTO_SPEC
         base = f"{self.format}+{self.schedule}"
+        if self.partition != "naive":
+            return f"{base}+{self.topology}+{self.partition}"
         if self.topology == registry.DEFAULT_TOPOLOGY:
             return base
         return f"{base}+{self.topology}"
@@ -148,6 +175,7 @@ class EngineConfig:
         """This config's knobs (waves, caps, axis, lr, ...) re-bound to a
         different spec — how the planner turns an auto config concrete."""
         return EngineConfig.from_spec(
-            spec, n_chunks=self.n_chunks, caps=self.caps,
+            spec, partition=self.partition, merge=self.merge,
+            n_chunks=self.n_chunks, caps=self.caps,
             block_tiles=self.block_tiles, axis=self.axis, lr=self.lr,
             precision=self.precision)

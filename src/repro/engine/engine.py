@@ -127,7 +127,7 @@ class Engine:
             return build()
         from repro.kernels import edgeplan
         key = _layout_cache_key(graph, self.config.format, self.config.caps,
-                                self.config.block_tiles)
+                                self.config.block_tiles, self.config.merge)
         return edgeplan.cached(key, (graph.rows, graph.cols, graph.vals),
                                build)
 
@@ -219,6 +219,8 @@ class EngineBundle:
             ids = np.minimum(np.asarray(mb.input_nodes, np.int64),
                              features.shape[0] - 1)
             features = features.gather(ids)
+        features = np.asarray(features, np.float32)
+        mb, features = self._apply_partition(mb, features)
         edges, dims = self.format.prepare_batch(mb, self.n_cores,
                                                 self.config)
         labels = np.asarray(labels)
@@ -230,9 +232,82 @@ class EngineBundle:
         return {
             "edges": edges,
             "dims": dims,
-            "x": np.asarray(features, np.float32),
+            "x": features,
             "labels": labels.astype(np.int32),
+            "report": self._plan_report(mb, features.shape[-1]),
         }
+
+    def _apply_partition(self, mb, features: np.ndarray):
+        """``partition="mincom"``: relabel every non-batch node space with
+        the communication-minimizing permutation chain
+        (:func:`repro.graph.partition.mincom_layer_perms` — space 0 stays
+        identity, so labels, logits and checkpointed batch order never
+        move) and permute the frontier feature rows to match.  Cached on
+        the layer chain's identity in the shared edge-plan LRU — repeated
+        batches (and the aggregator path) pay the greedy passes once.
+        ``naive`` (and a single-core mesh) returns the batch untouched."""
+        if self.config.partition != "mincom" or self.n_cores <= 1:
+            return mb, features
+        from repro.graph.coo import from_edges
+        from repro.graph.partition import mincom_layer_perms
+        from repro.kernels import edgeplan
+
+        layers = list(mb.layers)
+        key = tuple(k for coo in layers for k in
+                    edgeplan.coo_key(coo, "mincom-perms", self.n_cores))
+        pins = tuple(a for coo in layers
+                     for a in (coo.rows, coo.cols, coo.vals))
+        perms = edgeplan.cached(
+            key, pins, lambda: mincom_layer_perms(layers, self.n_cores))
+        relabeled = [
+            from_edges(perms[i][np.asarray(coo.rows, np.int64)],
+                       perms[i + 1][np.asarray(coo.cols, np.int64)],
+                       np.asarray(coo.vals, np.float32),
+                       coo.n_dst, coo.n_src)
+            for i, coo in enumerate(layers)]
+
+        class _RelabeledMB:           # duck-typed: formats read .layers only
+            layers = relabeled
+
+        # frontier rows move with their space-L ids: new row perm[v] = old v
+        x = features[np.argsort(perms[-1], kind="stable")]
+        return _RelabeledMB(), x
+
+    def _plan_report(self, mb, d: int) -> Dict[str, float]:
+        """Host-side partition/merge observability for one prepared batch:
+        measured exchange ``wire_bytes`` (per-core, summed over hop layers,
+        post-merge row accounting through ``Topology.plan(wire_rows=...)``)
+        plus the redundancy tier's ``virtual_vertices``/``pair_coverage``
+        (ELL format only; the shard build is LRU-cached, so reading the
+        stats here costs a cache hit)."""
+        from repro.graph.partition import exchange_rows
+
+        wire_bytes = 0
+        for coo in mb.layers:
+            wr = exchange_rows(np.asarray(coo.rows), np.asarray(coo.cols),
+                               np.asarray(coo.vals), coo.n_dst, coo.n_src,
+                               self.n_cores)
+            wire_bytes += self.topology.plan(
+                coo.n_dst, d, self.n_cores, wire_rows=wr).bytes_per_core
+        report = {"wire_bytes": float(wire_bytes), "virtual_vertices": 0.0,
+                  "pair_coverage": 0.0, "flop_reduction": 1.0}
+        if self.config.format == "ell" and self.config.merge == "redundancy":
+            from repro.distributed import aggregate as _agg
+            nv = pu = eb = ea = 0.0
+            for coo in mb.layers:
+                ee = _agg.shard_edges_ell(coo, self.n_cores,
+                                          caps=self.config.caps,
+                                          merge=self.config.merge)
+                nv += ee.n_virtual
+                pu += ee.pair_coverage
+                eb += ee.merge_stats.get("edges_before", 0)
+                ea += ee.merge_stats.get("edges_after", 0)
+            report["virtual_vertices"] = float(nv)
+            report["pair_coverage"] = float(pu / max(len(mb.layers), 1))
+            # aggregation MACs: every surviving edge is one, every virtual
+            # vertex costs two (its z = alpha*x[u] + beta*x[v] build)
+            report["flop_reduction"] = float(eb / max(ea + 2.0 * nv, 1.0))
+        return report
 
     def commit_batch(self, host_batch: Dict[str, Any]) -> Dict[str, Any]:
         """Host batch (from :meth:`prepare_batch`) → device-ready arrays,
@@ -248,13 +323,19 @@ class EngineBundle:
                 return leading_axis_put(self.mesh, a, self.axis)
         else:
             put = jnp.asarray
-        return {
+        out = {
             "edges": [jax.tree_util.tree_map(put, leaves)
                       for leaves in host_batch["edges"]],
             "dims": host_batch["dims"],
             "x": put(host_batch["x"]),
             "labels": put(host_batch["labels"]),
         }
+        if "report" in host_batch:
+            # host-side observability floats — not a device leaf, and kept
+            # out of the jitted step's pytree (train_step/forward pull
+            # edges/x/labels explicitly)
+            out["report"] = host_batch["report"]
+        return out
 
     def shard_batch(self, mb, features: np.ndarray, labels: np.ndarray
                     ) -> Dict[str, Any]:
@@ -392,12 +473,30 @@ class EngineBundle:
         mesh = self._require_mesh("aggregate")
         key = _layout_cache_key(coo, "agg", self.config.spec, self.n_cores,
                                 self.axis, self.config.caps, self.n_chunks,
-                                id(mesh))
+                                self.config.merge, id(mesh))
         return edgeplan.cached(key, (coo.rows, coo.cols, coo.vals, mesh),
                                lambda: self._build_aggregator(coo, mesh))
 
     def _build_aggregator(self, coo, mesh: Mesh):
         from repro.distributed.sharding import leading_axis_put
+
+        perm = None
+        if self.config.partition == "mincom" and self.n_cores > 1 \
+                and coo.n_dst == coo.n_src:
+            # square one-space graph: one permutation relabels both sides;
+            # x permutes in and y un-permutes out OUTSIDE shard_map (inside
+            # the jit), so callers keep the original row order
+            from repro.graph.coo import from_edges
+            from repro.graph.partition import (mincom_assignment,
+                                               partition_permutation)
+            assign = mincom_assignment(np.asarray(coo.rows, np.int64),
+                                       np.asarray(coo.cols, np.int64),
+                                       coo.n_dst, self.n_cores)
+            perm = partition_permutation(assign, self.n_cores)
+            coo = from_edges(perm[np.asarray(coo.rows, np.int64)],
+                             perm[np.asarray(coo.cols, np.int64)],
+                             np.asarray(coo.vals, np.float32),
+                             coo.n_dst, coo.n_src)
 
         leaves, n_dst, _ = self.format.shard(coo, self.n_cores, self.config)
         leaves = jax.tree_util.tree_map(
@@ -413,7 +512,13 @@ class EngineBundle:
             body, mesh=mesh,
             in_specs=(self._edge_specs(leaves), P(self.axis, None)),
             out_specs=P(self.axis, None))
-        return jax.jit(lambda x: fn(leaves, x))
+        if perm is None:
+            return jax.jit(lambda x: fn(leaves, x))
+        to_new = jnp.asarray(np.argsort(perm, kind="stable"))
+        to_old = jnp.asarray(perm)
+        return jax.jit(
+            lambda x: jnp.take(fn(leaves, jnp.take(x, to_new, axis=0)),
+                               to_old, axis=0))
 
     def aggregate(self, x: jnp.ndarray, graph=None) -> jnp.ndarray:
         """``y = A @ x`` through this engine's format + schedule."""

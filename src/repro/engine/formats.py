@@ -111,14 +111,16 @@ class EllFormat(Format):
 
     def build_local(self, coo, cfg):
         from repro.kernels import edgeplan
-        return edgeplan.build_plan(coo, caps=cfg.caps)
+        return edgeplan.build_plan(coo, caps=cfg.caps,
+                                   merge=getattr(cfg, "merge", "dedup"))
 
     def layer(self, layout, x, w, *, order="coag", activate=True):
         return _gcn._layer_ell_impl(layout, x, w, order=order,
                                     activate=activate)
 
     def shard(self, coo, n_cores, cfg):
-        ee = _agg.shard_edges_ell(coo, n_cores, caps=cfg.caps)
+        ee = _agg.shard_edges_ell(coo, n_cores, caps=cfg.caps,
+                                  merge=getattr(cfg, "merge", "dedup"))
         return (ee.tables, ee.n_dst, ee.n_src)
 
     def device_aggregate(self, schedule, axis_name, ndim, n_dst, leaves,

@@ -306,6 +306,51 @@ def rank_specs(model: CostModel, n_cores: int, *,
     return scored
 
 
+def rank_partitions(model: CostModel, coo, n_cores: int, *,
+                    topology: str = "hypercube", d: Optional[int] = None
+                    ) -> List[Tuple[str, float, int]]:
+    """Registered partitioners sorted by predicted step seconds on ``coo``.
+
+    For each ``partition`` knob value this relabels the graph
+    (``mincom`` → :func:`repro.graph.partition.mincom_assignment`; ``naive``
+    → identity), measures the post-merge wire content with
+    :func:`repro.graph.partition.exchange_rows`, plans the exchange with
+    ``wire_rows`` so ``ExchangePlan.bytes_per_core`` reflects the measured
+    cut, and scores it through ``model.predict`` — the partition axis seen
+    by the SAME cost model that ranks topologies.  Returns
+    ``[(name, predicted_seconds, bytes_per_core), ...]`` best-first; ties
+    prefer ``naive`` (no relabeling work for no predicted win).
+    """
+    import numpy as np
+
+    from repro.graph.partition import (PARTITIONS, exchange_rows,
+                                       mincom_assignment,
+                                       partition_permutation)
+
+    from .registry import get_topology
+
+    rows = np.asarray(coo.rows, np.int64)
+    cols = np.asarray(coo.cols, np.int64)
+    vals = np.asarray(coo.vals)
+    d = int(d) if d is not None else model.d
+    topo = get_topology(topology)
+    scored = []
+    for name in PARTITIONS:
+        if name == "mincom" and n_cores > 1 and coo.n_dst == coo.n_src:
+            assign = mincom_assignment(rows, cols, coo.n_dst, n_cores)
+            perm = partition_permutation(assign, n_cores)
+            r, c = perm[rows], perm[cols]
+        else:
+            r, c = rows, cols
+        wr = exchange_rows(r, c, vals, coo.n_dst, coo.n_src, n_cores)
+        plan = topo.plan(coo.n_dst, d, n_cores, cost_model=model,
+                         wire_rows=wr)
+        scored.append((name, float(plan.predicted_seconds),
+                       int(plan.bytes_per_core)))
+    scored.sort(key=lambda kv: (kv[1], 0 if kv[0] == "naive" else 1, kv[0]))
+    return scored
+
+
 # ---------------------------------------------------------------------------
 # Resolution: the three tiers.
 # ---------------------------------------------------------------------------

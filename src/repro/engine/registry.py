@@ -220,6 +220,14 @@ def available_topologies() -> List[str]:
     return sorted(_TOPOLOGIES)
 
 
+def available_partitions() -> List[str]:
+    """Registered partition-quality names (spec knob 4).  The registry
+    lives with the partitioners (:data:`repro.graph.partition.PARTITIONS`);
+    this accessor keeps spec tooling on one import."""
+    from repro.graph.partition import PARTITIONS
+    return sorted(PARTITIONS)
+
+
 def format_topologies(fmt: str) -> List[str]:
     """Topology names ``fmt`` supports (its restriction, or all)."""
     f = get_format(fmt)

@@ -29,6 +29,21 @@ index/value arrays), so per-step host edge prep disappears from the
 training loop.  :mod:`repro.kernels.ops` consumes the tables on device;
 :mod:`repro.distributed.aggregate` stacks per-sender plans for the
 hypercube schedule.
+
+Merge levels
+------------
+``merge="dedup"`` (default) is the sender-side merge above: duplicate
+``(row, col)`` pairs collapse into one weighted entry *within* each
+destination row.  ``merge="redundancy"`` adds the GraphACT-style pass
+(arXiv:2001.02498 §3) on top: :func:`mine_pair_redundancy` mines neighbor
+pairs shared *across* destination rows from the pair-frequency table,
+greedily matches them into **virtual vertices** (``z = α·x[u] + β·x[v]``),
+and rewrites the ELL tables so destination rows gather from the extended
+``original ∪ virtual`` source space.  The same Pallas/XLA gather kernels
+walk the rewritten tables unchanged — the only addition is one small
+pre-pass walk computing the virtual partials — and the backward stays
+transpose-free: the column-major tables cover the extended space, and the
+virtual rows' cotangents expand through the mirror of the pair table.
 """
 from __future__ import annotations
 
@@ -95,6 +110,180 @@ def merged_degrees(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     key = rows[keep] * (n_cols + 1) + cols[keep]
     uniq = np.unique(key)
     return np.bincount(uniq // (n_cols + 1), minlength=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# GraphACT-style cross-row redundancy mining (merge="redundancy").
+# ---------------------------------------------------------------------------
+MERGE_LEVELS = ("dedup", "redundancy")
+
+
+def validate_merge(merge: str) -> str:
+    if merge not in MERGE_LEVELS:
+        raise ValueError(f"unknown merge level {merge!r}; "
+                         f"supported: {list(MERGE_LEVELS)}")
+    return merge
+
+
+@dataclasses.dataclass(eq=False)
+class PairMerge:
+    """Rewritten flat edges + the virtual-vertex tier of one mining pass.
+
+    ``rows``/``cols``/``vals`` are the rewritten edge list: ``cols`` index
+    the EXTENDED source space ``[0, n_cols) ∪ [n_cols, n_cols + n_virtual)``
+    — original sources first, then virtual vertices.  ``vv_src``/``vv_coef``
+    define the tier: virtual vertex *z* is
+    ``α·x[vv_src[z, 0]] + β·x[vv_src[z, 1]]`` with ``(α, β) = vv_coef[z]``.
+    ``stats`` carries the accounting the benchmarks and Trainer surface.
+    """
+
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    vv_src: np.ndarray     # [n_virtual, 2] int64, original source ids
+    vv_coef: np.ndarray    # [n_virtual, 2] float32
+    n_rows: int
+    n_cols: int
+    stats: Dict
+
+    @property
+    def n_virtual(self) -> int:
+        return int(self.vv_src.shape[0])
+
+    def vv_flat(self) -> _FLAT:
+        """Virtual tier as flat edges (z, src, coef) — degree-2 rows of the
+        ``V`` matrix the pre-pass walks (``z = V @ x``)."""
+        z = np.repeat(np.arange(self.n_virtual, dtype=np.int64), 2)
+        return z, self.vv_src.reshape(-1), self.vv_coef.reshape(-1)
+
+
+def _dedup_flat(rows, cols, vals, n_cols: int) -> _FLAT:
+    """Drop zero-weight padding and merge duplicate (row, col) entries —
+    the within-row sender-side merge, shared with :func:`build_tables`."""
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    keep = vals != 0
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    if len(rows):
+        key = rows * (n_cols + 1) + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        vals = np.bincount(inv, weights=vals).astype(np.float32)
+        rows = uniq // (n_cols + 1)
+        cols = uniq % (n_cols + 1)
+    return rows, cols, vals
+
+
+def mine_pair_redundancy(rows, cols, vals, n_rows: int, n_cols: int, *,
+                         max_row_degree: int = 128, min_uses: int = 2,
+                         ratio_tol: float = 1e-6) -> PairMerge:
+    """GraphACT §3: greedy matching over the shared-neighbor pair table.
+
+    Host-side, once per graph.  A pair ``(u, v)`` appearing in rows
+    ``r1, r2, …`` factors into one virtual vertex only when every row's
+    weight pair is PROPORTIONAL to the first's (``a_rv/a_ru`` constant
+    within ``ratio_tol`` relative) — for symmetric GCN normalization
+    ``a_ru = d_r^{-1/2} d_u^{-1/2}`` that ratio is exactly
+    ``(d_u/d_v)^{1/2}`` for every row, so all structural sharing factors;
+    arbitrary per-edge weights simply yield fewer (or zero) matches and the
+    rewrite stays exact either way.  Occurrences are consumed greedily in
+    descending pair-frequency order; each (row, neighbor) entry joins at
+    most one virtual vertex, and a vertex must collect ``min_uses`` rows to
+    pay for its own pre-pass FLOPs.  Rows above ``max_row_degree`` skip
+    pair enumeration (hub rows would cost O(deg²) and rarely share full
+    pairs).
+
+    Weight contract: row *r*'s rewritten entry is ``w_r = a_ru/α`` with
+    ``(α, β)`` the first occurrence's weights — ``w_r·α`` reproduces
+    ``a_ru`` exactly and ``w_r·β`` reproduces ``a_rv`` within ``ratio_tol``
+    relative (0 for the defining row), so downstream losses match the
+    unmerged plan to fp32 roundoff.
+    """
+    rows, cols, vals = _dedup_flat(rows, cols, vals, n_cols)
+    edges_before = len(rows)
+    stats = {"edges_before": edges_before, "edges_after": edges_before,
+             "n_virtual": 0, "pair_uses": 0, "pair_coverage": 0.0,
+             "flop_reduction": 1.0}
+    empty = PairMerge(rows=rows, cols=cols, vals=vals,
+                      vv_src=np.zeros((0, 2), np.int64),
+                      vv_coef=np.zeros((0, 2), np.float32),
+                      n_rows=n_rows, n_cols=n_cols, stats=stats)
+    if edges_before == 0:
+        return empty
+    # entries arrive (row, col)-sorted from _dedup_flat
+    deg = np.bincount(rows, minlength=n_rows)
+    starts = np.zeros(n_rows + 1, np.int64)
+    np.cumsum(deg, out=starts[1:])
+    # pair-frequency table: (u, v) -> [(edge_idx_u, edge_idx_v), ...]
+    occ: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for r in np.flatnonzero((deg >= 2) & (deg <= max_row_degree)):
+        lo, hi = int(starts[r]), int(starts[r + 1])
+        for i in range(lo, hi):
+            for j in range(i + 1, hi):
+                occ.setdefault((int(cols[i]), int(cols[j])), []) \
+                   .append((i, j))
+    # greedy matching, most-shared pairs first (deterministic tie-break)
+    order = sorted(occ, key=lambda p: (-len(occ[p]), p))
+    used = np.zeros(edges_before, bool)
+    vals64 = vals.astype(np.float64)
+    vv_src: List[Tuple[int, int]] = []
+    vv_coef: List[Tuple[float, float]] = []
+    new_rows: List[int] = []
+    new_cols: List[int] = []
+    new_vals: List[float] = []
+    pair_uses = 0
+    for pair in order:
+        hits = occ[pair]
+        if len(hits) < min_uses:
+            break                      # sorted by count: nothing below pays
+        avail = [(i, j) for i, j in hits if not (used[i] or used[j])]
+        while len(avail) >= min_uses:
+            i0, j0 = avail[0]
+            alpha, beta = vals64[i0], vals64[j0]
+            # the cluster: occurrences whose weight pair is proportional
+            # to the defining row's (a_ru·β ≈ a_rv·α)
+            cluster = [(i, j) for i, j in avail
+                       if abs(vals64[i] * beta - vals64[j] * alpha)
+                       <= ratio_tol * abs(vals64[j] * alpha)]
+            if len(cluster) < min_uses:
+                avail = avail[1:]      # lone ratio class: try the next
+                continue
+            z = len(vv_src)
+            vv_src.append(pair)
+            vv_coef.append((float(alpha), float(beta)))
+            for i, j in cluster:
+                used[i] = used[j] = True
+                new_rows.append(int(rows[i]))
+                new_cols.append(n_cols + z)
+                new_vals.append(float(vals64[i] / alpha))
+            pair_uses += len(cluster)
+            avail = [(i, j) for i, j in avail
+                     if not (used[i] or used[j])]
+    if not vv_src:
+        return empty
+    keep = ~used
+    out_rows = np.concatenate([rows[keep], np.asarray(new_rows, np.int64)])
+    out_cols = np.concatenate([cols[keep], np.asarray(new_cols, np.int64)])
+    out_vals = np.concatenate([vals[keep],
+                               np.asarray(new_vals, np.float32)])
+    n_virtual = len(vv_src)
+    edges_after = len(out_rows)
+    stats = {
+        "edges_before": edges_before,
+        "edges_after": edges_after,
+        "n_virtual": n_virtual,
+        "pair_uses": pair_uses,
+        # fraction of (deduped) edges absorbed into virtual gathers
+        "pair_coverage": 2.0 * pair_uses / edges_before,
+        # aggregation MACs before vs after, pre-pass included (2 per vv)
+        "flop_reduction": edges_before / max(edges_after + 2 * n_virtual,
+                                             1),
+    }
+    return PairMerge(rows=out_rows, cols=out_cols, vals=out_vals,
+                     vv_src=np.asarray(vv_src, np.int64).reshape(-1, 2),
+                     vv_coef=np.asarray(vv_coef,
+                                        np.float32).reshape(-1, 2),
+                     n_rows=n_rows, n_cols=n_cols, stats=stats)
 
 
 @dataclasses.dataclass(eq=False)
@@ -214,6 +403,12 @@ class EdgePlan:
     ``fwd``: dst-major tables (``y[r] = Σ v·x[c]``, r ∈ [0, n_dst)).
     ``bwd``: the transpose walk's tables over the SAME edges, column-major
     (``dx[c] = Σ v·e[r]``) — the kernel-level transpose-free backward.
+
+    Under ``merge="redundancy"`` both directions cover the EXTENDED source
+    space (original ∪ virtual): ``vv`` holds the pre-pass tables computing
+    the virtual partials (``z = V @ x``), ``vv_t`` their column-major
+    mirror that expands virtual-row cotangents back onto original sources
+    (``dx += Vᵀ g``), and ``merge_stats`` the mining accounting.
     """
 
     n_dst: int
@@ -221,6 +416,9 @@ class EdgePlan:
     nnz: int
     fwd: EllTables
     bwd: EllTables
+    vv: Optional[EllTables] = None
+    vv_t: Optional[EllTables] = None
+    merge_stats: Dict = dataclasses.field(default_factory=dict)
     _device: Optional[Dict] = dataclasses.field(default=None, repr=False)
 
     @property
@@ -232,6 +430,18 @@ class EdgePlan:
     def padding_overhead(self) -> float:
         """Padded ELL slots per stored entry (bucketing keeps this small)."""
         return self.fwd.padded_entries / max(self.fwd.n_entries, 1)
+
+    @property
+    def n_virtual(self) -> int:
+        return int(self.vv.n_rows) if self.vv is not None else 0
+
+    @property
+    def pair_coverage(self) -> float:
+        return float(self.merge_stats.get("pair_coverage", 0.0))
+
+    @property
+    def flop_reduction(self) -> float:
+        return float(self.merge_stats.get("flop_reduction", 1.0))
 
     def device_tables(self) -> Dict:
         """jnp copies of both directions, converted once and cached."""
@@ -245,6 +455,17 @@ class EdgePlan:
                 "t_vals": tuple(jnp.asarray(v) for v in self.bwd.vals),
                 "t_inv": jnp.asarray(self.bwd.inv_perm),
             }
+            if self.vv is not None:
+                self._device.update({
+                    "vv_cols": tuple(jnp.asarray(c) for c in self.vv.cols),
+                    "vv_vals": tuple(jnp.asarray(v) for v in self.vv.vals),
+                    "vv_inv": jnp.asarray(self.vv.inv_perm),
+                    "vvt_cols": tuple(jnp.asarray(c)
+                                      for c in self.vv_t.cols),
+                    "vvt_vals": tuple(jnp.asarray(v)
+                                      for v in self.vv_t.vals),
+                    "vvt_inv": jnp.asarray(self.vv_t.inv_perm),
+                })
         return self._device
 
 
@@ -296,7 +517,8 @@ def coo_key(coo, *extra) -> tuple:
             int(coo.n_dst), int(coo.n_src)) + tuple(extra)
 
 
-def build_plan(coo, caps: Optional[Caps] = None) -> EdgePlan:
+def build_plan(coo, caps: Optional[Caps] = None,
+               merge: str = "dedup") -> EdgePlan:
     """COO → cached :class:`EdgePlan` (dst-major fwd + column-major bwd).
 
     The merge order comes from :func:`repro.core.blockmsg.compress_block`:
@@ -304,7 +526,14 @@ def build_plan(coo, caps: Optional[Caps] = None) -> EdgePlan:
     each aggregate slot, and the transpose tables run the same compressor
     on the column-major walk.  ``caps=None`` reads the autotuned bucket
     scheme (:func:`repro.kernels.tune.get_config`).
+
+    ``merge="redundancy"`` runs :func:`mine_pair_redundancy` first and
+    builds both directions over the extended (original ∪ virtual) source
+    space, plus the small ``vv``/``vv_t`` pre-pass tables (module
+    docstring, "Merge levels").  With no minable pairs the plan degrades
+    to the plain ``dedup`` tables.
     """
+    validate_merge(merge)
     if caps is None:
         from repro.kernels.tune import get_config
         caps = get_config()["caps"]
@@ -317,6 +546,24 @@ def build_plan(coo, caps: Optional[Caps] = None) -> EdgePlan:
         vals = np.asarray(coo.vals, np.float32)
         keep = vals != 0
         rows, cols, vals = rows[keep], cols[keep], vals[keep]
+        nnz = int(keep.sum())
+        if merge == "redundancy":
+            mine = mine_pair_redundancy(rows, cols, vals, coo.n_dst,
+                                        coo.n_src)
+            if mine.n_virtual:
+                ext = coo.n_src + mine.n_virtual
+                fwd = build_tables(mine.rows, mine.cols, mine.vals,
+                                   coo.n_dst, ext, caps=caps)
+                bwd = build_tables(mine.cols, mine.rows, mine.vals,
+                                   ext, coo.n_dst, caps=caps)
+                zr, zc, zv = mine.vv_flat()
+                vv = build_tables(zr, zc, zv, mine.n_virtual, coo.n_src,
+                                  caps=caps)
+                vv_t = build_tables(zc, zr, zv, coo.n_src, mine.n_virtual,
+                                    caps=caps)
+                return EdgePlan(n_dst=int(coo.n_dst), n_src=int(coo.n_src),
+                                nnz=nnz, fwd=fwd, bwd=bwd, vv=vv,
+                                vv_t=vv_t, merge_stats=dict(mine.stats))
         bm_f = compress_block(rows, cols, vals, 0, 0)
         bm_b = compress_block(cols, rows, vals, 0, 0)
         fwd = build_tables(*flat_from_compressed(bm_f), coo.n_dst, coo.n_src,
@@ -324,7 +571,7 @@ def build_plan(coo, caps: Optional[Caps] = None) -> EdgePlan:
         bwd = build_tables(*flat_from_compressed(bm_b), coo.n_src, coo.n_dst,
                            caps=caps)
         return EdgePlan(n_dst=int(coo.n_dst), n_src=int(coo.n_src),
-                        nnz=int(keep.sum()), fwd=fwd, bwd=bwd)
+                        nnz=nnz, fwd=fwd, bwd=bwd)
 
-    return cached(coo_key(coo, "plan", caps_key),
+    return cached(coo_key(coo, "plan", caps_key, merge),
                   (coo.rows, coo.cols, coo.vals), _build)

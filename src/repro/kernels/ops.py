@@ -195,10 +195,33 @@ def ell_apply(tables: Dict, x: jnp.ndarray, *, transpose: bool = False,
     ``transpose=True`` walks the column-major tables (``Aᵀ e``).
     ``use_pallas`` forces the kernel (tests run it in interpret mode off-TPU
     to exercise the exact Pallas body); ``None`` picks the backend default.
+
+    Redundancy-merged plans (tables carrying the ``vv_*``/``vvt_*`` keys
+    from :meth:`repro.kernels.edgeplan.EdgePlan.device_tables`) add one
+    small pre-pass with the SAME kernel: forward computes the virtual
+    partials ``z = V x`` and walks the main tables over ``[x; z]``; the
+    transpose splits the extended cotangent and routes the virtual slice
+    back through ``Vᵀ`` — ``dx = gₒ + Vᵀ g_v`` — so the transpose-free
+    contract survives the rewrite.  The main bucket tables are identical
+    in shape either way; the kernel never learns merging happened.
     """
+    merged = "vv_cols" in tables
     if transpose:
-        return _ell_walk(tables["t_cols"], tables["t_vals"], tables["t_inv"],
-                         x, use_pallas)
+        g = _ell_walk(tables["t_cols"], tables["t_vals"], tables["t_inv"],
+                      x, use_pallas)
+        if not merged:
+            return g
+        # vvt tables have one output row per ORIGINAL source: the static
+        # split point n_src is their inv length (no scalar leaves in the
+        # tables pytree — shapes carry the metadata).
+        n_src = tables["vvt_inv"].shape[0]
+        dz = _ell_walk(tables["vvt_cols"], tables["vvt_vals"],
+                       tables["vvt_inv"], g[n_src:], use_pallas)
+        return g[:n_src] + dz
+    if merged:
+        z = _ell_walk(tables["vv_cols"], tables["vv_vals"], tables["vv_inv"],
+                      x, use_pallas)
+        x = jnp.concatenate([x, z.astype(x.dtype)], axis=0)
     return _ell_walk(tables["cols"], tables["vals"], tables["inv"], x,
                      use_pallas)
 
@@ -214,9 +237,11 @@ def ell_aggregate(tables: Dict, x: jnp.ndarray) -> jnp.ndarray:
     Forward walks the dst-major tables; the registered backward walks the
     column-major tables of the SAME edges with the SAME kernel — no ``Aᵀ``,
     no transposed residual (aggregation is linear in ``x``: the plan itself
-    is the only residual), and no segment-sum scatter anywhere.
+    is the only residual), and no segment-sum scatter anywhere.  Plans with
+    a virtual-vertex tier route through :func:`ell_apply`'s pre-pass in
+    both directions with the same contract.
     """
-    return _ell_walk(tables["cols"], tables["vals"], tables["inv"], x, None)
+    return ell_apply(tables, x)
 
 
 def _ell_aggregate_fwd(tables, x):
@@ -224,8 +249,7 @@ def _ell_aggregate_fwd(tables, x):
 
 
 def _ell_aggregate_bwd(tables, ct):
-    dx = _ell_walk(tables["t_cols"], tables["t_vals"], tables["t_inv"],
-                   ct, None)
+    dx = ell_apply(tables, ct, transpose=True)
     return _zero_ct(tables), dx
 
 

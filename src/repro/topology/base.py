@@ -135,19 +135,34 @@ class Topology:
 
     def plan(self, n_rows: int, d: int, n_cores: int,
              dtype_bytes: int = 4, axis: str = "model",
-             cost_model=None) -> ExchangePlan:
+             cost_model=None, wire_rows: Optional[int] = None
+             ) -> ExchangePlan:
         """The per-step exchange plan (steps + wire cost) for ``n_cores``.
 
         ``cost_model`` (a :class:`repro.engine.planner.CostModel`, duck-typed
         on ``.predict(plan)``) fills ``predicted_seconds``; without one the
         field stays ``None`` — planning never requires a fitted model.
+
+        ``wire_rows`` is the measured post-merge wire content of the
+        exchange, in partial rows across all cores — the distinct
+        (destination row, sender core) cross-core pairs the sender-side
+        merge actually ships (:func:`repro.graph.partition.exchange_rows`).
+        The structural default assumes every non-owned row crosses
+        (``n_rows·(1 − 1/P)`` per core); a measured count rescales
+        ``bytes_per_core`` by its ratio to that worst case, which is how
+        partition quality (``mincom`` vs ``naive``) and redundancy merging
+        become visible to the planner's cost model.
         """
         self.validate_cores(n_cores)
+        bpc = self.bytes_per_core(n_rows, d, n_cores, dtype_bytes)
+        if wire_rows is not None and n_cores > 1:
+            # worst case: every row needed from every non-owner core
+            dense_rows = n_rows * (n_cores - 1)
+            bpc = int(round(bpc * min(wire_rows / max(dense_rows, 1), 1.0)))
         plan = ExchangePlan(
             topology=self.name, n_cores=n_cores,
             steps=self.steps(n_cores),
-            bytes_per_core=self.bytes_per_core(n_rows, d, n_cores,
-                                               dtype_bytes),
+            bytes_per_core=bpc,
             max_step_rows=self.max_step_rows(n_rows, n_cores), axis=axis,
             link_parallelism=self.link_parallelism)
         if cost_model is not None:

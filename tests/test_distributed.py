@@ -143,6 +143,32 @@ def test_compressed_psum_and_error_feedback():
     """))
 
 
+def test_compressed_psum_rejects_non_hypercube_core_counts():
+    """Regression: the dimension-ordered hypercube rounds (peer = i ^ 2^b)
+    silently mis-routed on non-power-of-two counts; now the ``n_cores=``
+    form raises a ValueError naming the topology, and exactly one of
+    ``ndim``/``n_cores`` must be given."""
+    import jax.numpy as jnp
+    from repro.distributed.compress import (_hypercube_ndim,
+                                            compressed_psum,
+                                            ef_compress_grads)
+
+    assert _hypercube_ndim(1) == 0
+    assert _hypercube_ndim(8) == 3
+    x = jnp.zeros((16,), jnp.float32)
+    for bad in (3, 6, 12):
+        with pytest.raises(ValueError, match="power-of-two"):
+            compressed_psum(x, "model", n_cores=bad)
+        with pytest.raises(ValueError, match="power-of-two"):
+            ef_compress_grads({"w": x}, {"w": x}, "model", n_cores=bad)
+    with pytest.raises(ValueError, match="exactly one"):
+        compressed_psum(x, "model")
+    with pytest.raises(ValueError, match="exactly one"):
+        compressed_psum(x, "model", 2, n_cores=4)
+    with pytest.raises(ValueError, match="exactly one"):
+        ef_compress_grads({"w": x}, {"w": x}, "model", 2, n_cores=4)
+
+
 def test_grad_accum_matches_full_batch():
     run_subprocess(textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp

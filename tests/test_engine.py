@@ -105,7 +105,10 @@ def test_auto_spec_parses_and_is_complete():
     # contract as unknown format/schedule
     ("coo+serial+extra", "registered topologies"),
     ("ell+pipelined+mobius", "registered topologies"),
-    ("coo+serial+hypercube+extra", "valid specs"),   # malformed spec string
+    # a fourth part is the partition axis: unknown names list the
+    # registered partitions, same contract as format/schedule/topology
+    ("coo+serial+hypercube+extra", "registered partitions"),
+    ("coo+serial+hypercube+mincom+extra", "valid specs"),  # malformed spec
     ("", "valid specs"),
 ])
 def test_invalid_specs_raise_listing_options(bad, needle):
