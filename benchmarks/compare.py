@@ -50,6 +50,14 @@ TRACKED: Dict[str, str] = {
     # the smoke gates wire_bytes_reduction > 1 and loss bit-match; this
     # tracks that the merged plan's step win doesn't erode
     "redundancy.step_speedup": "higher",
+    # the serving arms: throughput-at-SLO and p99 latency of the
+    # incremental-aggregation path under the shared open-loop trace.
+    # These are the issue-mandated SLO metrics; unlike the paired ratios
+    # above they carry some host-load sensitivity (absolute wall times),
+    # so they stay warn-only — the hard gate is the load-robust
+    # incremental_vs_cold_throughput ratio in run.py --smoke
+    "serving.throughput_at_slo": "higher",
+    "serving.p99_ms": "lower",
 }
 
 # every BENCH_*.json a current benchmark produces — the ownership registry
@@ -62,6 +70,7 @@ KNOWN_RECORDS = {
     "BENCH_input_pipeline.json": "benchmarks/epoch_time.py --input-pipeline",
     "BENCH_feature_store.json":  "benchmarks/epoch_time.py --feature-store",
     "BENCH_redundancy.json":     "benchmarks/epoch_time.py --redundancy",
+    "BENCH_serving.json":        "benchmarks/serving.py",
     "BENCH_topology.json":       "benchmarks/epoch_time.py --topology",
     "BENCH_auto.json":           "benchmarks/epoch_time.py --auto",
     "BENCH_autotune.json":       "repro.kernels.tune (ELL autotuner)",

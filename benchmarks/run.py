@@ -15,15 +15,20 @@ staged-prefetch input pipelines, ``BENCH_feature_store.json``),
 races the GraphACT-merged ELL engine (``merge="redundancy"`` + ``mincom``
 partitioning) against the plain ELL arm on a bit-matching power-law
 stream (``BENCH_redundancy.json``),
+serves open-loop traffic through the online inference service — trained
+checkpoint, request coalescing, incremental-aggregation cache vs cold
+recompute under a latency SLO (``BENCH_serving.json``),
 sanity-runs the block-layout and ELL SpMM kernels against their oracle,
 diffs the fresh record against the previous ``BENCH_smoke.json``
 (warn-only), and writes ``BENCH_smoke.json`` + ``BENCH_overlap.json`` for
 the workflow to upload as artifacts.  The smoke FAILS if the ELL arm's
 aggregation speedups drop to ≤1.0, the hypercube NoC stops beating the
 dense all-pairs reference, the auto spec loses to the best manual arm by
->10% (or stops bit-matching it), or the staged store pipeline stops
+>10% (or stops bit-matching it), the staged store pipeline stops
 cutting host stall / bit-matching the dense stream / hitting its
-hot-vertex cache — no regression arm ships.
+hot-vertex cache, or the serving arm's incremental path stops
+bit-matching the cold recompute / coalescing concurrent queries /
+beating the cold arm on throughput-at-SLO — no regression arm ships.
 """
 from __future__ import annotations
 
@@ -61,6 +66,7 @@ def smoke() -> int:
                                        run_input_pipeline_arm,
                                        run_overlap_arm, run_redundancy_arm,
                                        run_topology_arm)
+    from benchmarks.serving import run_serving_arm
     rec["overlap"] = run_overlap_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\ntopology sweep — every registered interconnect "
@@ -82,6 +88,10 @@ def smoke() -> int:
     print(f"\n{'=' * 72}\nredundancy — GraphACT-merged ELL + mincom "
           f"partitioning vs plain ELL (toy)\n{'=' * 72}")
     rec["redundancy"] = run_redundancy_arm(4, smoke=True)
+
+    print(f"\n{'=' * 72}\nserving — online inference: coalescing + "
+          f"incremental aggregation vs cold (toy)\n{'=' * 72}")
+    rec["serving"] = run_serving_arm(4, smoke=True)
 
     print(f"\n{'=' * 72}\nSpMM kernels vs oracle (interpret)\n{'=' * 72}")
     import numpy as np
@@ -135,6 +145,7 @@ def smoke() -> int:
     au = rec["auto"]
     fs = rec["feature_store"]
     rd = rec["redundancy"]
+    sv = rec["serving"]
     # direct indexing on purpose: the ELL arm always runs in smoke, and a
     # renamed/missing metric must be a loud KeyError, not a silently
     # disabled gate
@@ -175,7 +186,16 @@ def smoke() -> int:
           # partitioner that stops beating the naive split) fails here
           and rd["loss_match"]
           and rd["wire_bytes_reduction"] > 1.0
-          and rd["flop_reduction"] > 1.0)
+          and rd["flop_reduction"] > 1.0
+          # the serving gate: after a mixed stream of queries and
+          # graph/feature updates every incrementally-served logit must
+          # bit-match a cold full recompute, the coalescer must actually
+          # merge concurrent duplicate queries, and the incremental
+          # aggregation cache must BEAT the cold path on throughput at the
+          # latency SLO (paired replay of one trace — load is common-mode)
+          and sv["bit_match"]
+          and sv["coalesce_factor"] > 1.0
+          and sv["incremental_vs_cold_throughput"] > 1.0)
     print("SMOKE", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.launch.serve import Request, Server
+from repro.launch.lm_serve import Request, Server
 
 
 def main() -> None:

@@ -260,9 +260,10 @@ def _roofline_dims(stats: GraphStats) -> Tuple[int, int, int, int]:
 def rank_specs(model: CostModel, n_cores: int, *,
                graph_stats: Optional[GraphStats] = None,
                backend: Optional[str] = None,
-               candidates: Optional[Sequence[str]] = None
+               candidates: Optional[Sequence[str]] = None,
+               mode: str = "train", max_batch: int = 8
                ) -> List[Tuple[str, float]]:
-    """Candidate three-part specs sorted by predicted step seconds.
+    """Candidate three-part specs sorted by predicted seconds.
 
     The exchange side scores each topology's :class:`ExchangePlan` through
     ``model``; the compute side scales ``model.const`` by the candidate
@@ -271,13 +272,37 @@ def rank_specs(model: CostModel, n_cores: int, *,
     and the ranking is purely the interconnect).  Ties prefer
     ``ell+pipelined`` (the measured-best format arm), then lexicographic —
     deterministic, so resumes re-rank identically.
+
+    ``mode`` picks the objective:
+
+    * ``"train"`` — per-step seconds at the fitted workload's row count
+      (throughput: the bytes term dominates at training batch sizes).
+    * ``"serving"`` — mean predicted LATENCY over coalesced micro-batch
+      sizes ``1, 2, 4, … max_batch``.  Online rows-per-exchange are tiny,
+      so the per-step α·steps latency term dominates and the ranking can
+      invert relative to train mode — a topology that wins on wire bytes
+      at 512 rows loses at 4 rows if it takes more hops.  Every batch size
+      weighs equally (each micro-batch is one user-visible latency, not
+      one row).
     """
     from .registry import get_topology
 
+    if mode not in ("train", "serving"):
+        raise ValueError(f"unknown rank mode {mode!r}; "
+                         "expected 'train' or 'serving'")
     specs = list(candidates) if candidates is not None \
         else supported_specs(three_part=True)
     n_rows = graph_stats.n_dst if graph_stats is not None else model.n_rows
     d = graph_stats.feat_dim if graph_stats is not None else model.d
+    if mode == "serving":
+        batch_sizes = []
+        b = 1
+        while b < max_batch:
+            batch_sizes.append(b)
+            b *= 2
+        batch_sizes.append(max_batch)
+    else:
+        batch_sizes = [n_rows]
     base_s = None
     if graph_stats is not None:
         backend = backend or _backend()
@@ -287,8 +312,9 @@ def rank_specs(model: CostModel, n_cores: int, *,
     for spec in specs:
         fmt, sched, topo = spec.split("+")
         try:
-            plan = get_topology(topo).plan(n_rows, d, n_cores,
-                                           cost_model=model)
+            plans = [get_topology(topo).plan(b, d, n_cores,
+                                             cost_model=model)
+                     for b in batch_sizes]
         except ValueError:            # this topology can't run at n_cores
             continue
         ratio = 1.0
@@ -296,9 +322,10 @@ def rank_specs(model: CostModel, n_cores: int, *,
             s = _format_roofline_seconds(backend, f"{fmt}+{sched}", dims)
             if s:
                 ratio = s / base_s
-        score = (model.const * ratio + model.alpha * plan.steps
-                 + model.beta * plan.bytes_per_core
-                 / max(plan.link_parallelism, 1.0))
+        score = sum(model.const * ratio + model.alpha * plan.steps
+                    + model.beta * plan.bytes_per_core
+                    / max(plan.link_parallelism, 1.0)
+                    for plan in plans) / len(plans)
         scored.append((spec, float(score)))
     scored.sort(key=lambda kv: (kv[1],
                                 0 if kv[0].startswith("ell+pipelined")
@@ -409,7 +436,8 @@ def resolve_spec(*, n_cores: int,
                  graph_stats: Optional[GraphStats] = None,
                  backend: Optional[str] = None,
                  candidates: Optional[Sequence[str]] = None,
-                 path: Optional[str] = None) -> str:
+                 path: Optional[str] = None, mode: str = "train",
+                 max_batch: int = 8) -> str:
     """The concrete spec ``"auto"`` stands for at ``n_cores``.
 
     Tier 1: a persisted :func:`autotune` winner for this
@@ -417,15 +445,23 @@ def resolve_spec(*, n_cores: int,
     analytic cost model fitted from the topology sweep record.  Tier 3:
     :data:`DEFAULT_SPEC`.  Pure reads — never measures, never sweeps —
     and always returns a registered spec.
+
+    ``mode="serving"`` (the :class:`~repro.serving.InferenceEngine` path)
+    skips tier 1 — autotune winners measure training step THROUGHPUT,
+    the wrong objective for micro-batch latency — and ranks tier 2 with
+    the latency-weighted serving objective over batch sizes
+    ``1..max_batch`` (see :func:`rank_specs`).
     """
     backend = backend or _backend()
-    spec = _persisted_spec(backend, n_cores, graph_stats, path)
-    if spec is not None:
-        return spec
+    if mode != "serving":
+        spec = _persisted_spec(backend, n_cores, graph_stats, path)
+        if spec is not None:
+            return spec
     model = fit_cost_model(n_cores=n_cores, backend=backend)
     if model is not None:
         ranked = rank_specs(model, n_cores, graph_stats=graph_stats,
-                            backend=backend, candidates=candidates)
+                            backend=backend, candidates=candidates,
+                            mode=mode, max_batch=max_batch)
         if ranked:
             return ranked[0][0]
     return DEFAULT_SPEC

@@ -1,143 +1,177 @@
-"""Batched serving loop — continuous-batching decode over the unified LM API.
+"""GCN serving CLI — the thin launcher over :mod:`repro.serving`.
 
-A minimal production-shaped server: a request queue feeds a fixed-slot batch
-(continuous batching — a finished request's slot is refilled immediately),
-prefill runs per-request, decode steps the whole batch against the shared
-cache.  On CPU this runs the smoke configs; the full configs are exercised
-shape-level by the dry-run's decode cells.
+Trains (or restores) a checkpoint, builds an
+:class:`~repro.serving.InferenceEngine` on it, and drives the
+:class:`~repro.serving.InferenceService` under synthetic open-loop traffic,
+printing p50/p99 latency, throughput-at-SLO, coalesce factor and cache
+hit-rate.  The LM continuous-batching loop that used to live here moved to
+:mod:`repro.launch.lm_serve`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --requests 8 --max-new 16
+CPU smoke (the CI ``serving-smoke`` job)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+        python -m repro.launch.serve --smoke
+
+``--smoke`` hard-asserts the serving contract: logits after a mixed stream
+of queries and graph/feature updates bit-match a cold full recompute, and
+open-loop p99 stays under ``--p99-budget-ms``; exit 1 on either failure.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
-from typing import Dict, List, Optional
+import os
+import tempfile
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke
-from repro.models import lm
+
+def _train_checkpoint(args, ckpt_dir: str):
+    """Train a few steps on ``--n-cores`` simulated devices and checkpoint
+    — the serving engine then loads what a real deployment would: a
+    CheckpointManager directory, not in-process weights."""
+    from repro.launch.trainer import Trainer
+
+    trainer = Trainer(args.train_spec, "flickr", n_cores=args.n_cores,
+                      scale=args.scale, feat_dim=args.feat_dim,
+                      hidden=args.hidden, batch_size=args.batch_size,
+                      pad_multiple=max(64, args.n_cores),
+                      ckpt_dir=ckpt_dir, log_every=0, seed=args.seed)
+    trainer.train_steps(args.train_steps)
+    trainer.save(sync=True)
+    dataset = trainer.dataset
+    trainer.close()
+    return dataset
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # [p] int32
-    max_new: int
-    generated: List[int] = dataclasses.field(default_factory=list)
+def build_engine(args, ckpt_dir: str, dataset=None):
+    from repro.graph import make_dataset
+    from repro.serving import InferenceEngine
 
-    @property
-    def done(self) -> bool:
-        return len(self.generated) >= self.max_new
-
-
-class Server:
-    """Fixed-slot continuous batching server."""
-
-    def __init__(self, arch: str, *, slots: int = 4, max_seq: int = 128,
-                 smoke: bool = True, seed: int = 0):
-        self.cfg = get_smoke(arch) if smoke else get_config(arch)
-        if self.cfg.family == "encdec":
-            raise NotImplementedError(
-                "serve loop drives decoder-only archs; seamless decode is "
-                "covered by the dry-run decode cells")
-        self.max_seq = max_seq
-        self.slots = slots
-        self.params = lm.init_params(jax.random.PRNGKey(seed), self.cfg,
-                                     dtype=jnp.float32)
-        self.cache = lm.init_cache(self.cfg, slots, max_seq,
-                                   dtype=jnp.float32)
-        self.decode = jax.jit(lm.decode_fn(self.cfg), donate_argnums=(1,))
-        self.slot_req: List[Optional[Request]] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)
-        self.queue: List[Request] = []
-        self.completed: List[Request] = []
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _admit(self) -> None:
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[s] = req
-                # per-request prefill: feed prompt tokens through decode
-                # steps (slot-level prefill keeps the batch cache layout;
-                # cheap at smoke scale, flash-prefill at production scale)
-                for t, tok in enumerate(req.prompt):
-                    self._step_slot(s, int(tok))
-                self.slot_pos[s] = len(req.prompt)
-
-    def _step_slot(self, s: int, token: int) -> None:
-        # single-slot step: batch with this slot's token, others pad
-        tokens = np.zeros((self.slots, 1), np.int32)
-        tokens[s, 0] = token
-        logits, self.cache = self.decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.int32(int(self.slot_pos[s])))
-        self._last_logits = np.asarray(logits)
-
-    def step(self) -> int:
-        """One decode step over all active slots; returns #active."""
-        self._admit()
-        active = [s for s in range(self.slots) if self.slot_req[s]]
-        if not active:
-            return 0
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            last = req.generated[-1] if req.generated else \
-                int(req.prompt[-1])
-            tokens[s, 0] = last
-        pos = int(self.slot_pos[active[0]])   # homogeneous smoke case
-        logits, self.cache = self.decode(self.params, self.cache,
-                                         jnp.asarray(tokens),
-                                         jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
-        for s in active:
-            req = self.slot_req[s]
-            req.generated.append(int(nxt[s]))
-            self.slot_pos[s] += 1
-            if req.done or self.slot_pos[s] >= self.max_seq - 1:
-                self.completed.append(req)
-                self.slot_req[s] = None
-                self.slot_pos[s] = 0
-        return len(active)
-
-    def run(self) -> Dict[str, float]:
-        t0 = time.time()
-        steps = 0
-        tokens = 0
-        while self.queue or any(self.slot_req):
-            tokens += self.step()
-            steps += 1
-        dt = time.time() - t0
-        return {"steps": steps, "tokens": tokens, "wall_s": dt,
-                "tok_per_s": tokens / max(dt, 1e-9)}
+    if dataset is None:
+        dataset = make_dataset("flickr", scale=args.scale,
+                               feat_dim=args.feat_dim)
+    return InferenceEngine(
+        args.spec, dataset.graph, dataset.features, ckpt_dir=ckpt_dir,
+        cache_capacity=args.cache_capacity,
+        feature_cache_capacity=args.feature_cache_capacity,
+        max_batch=args.max_batch), dataset
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    args = ap.parse_args()
-    rng = np.random.default_rng(0)
-    srv = Server(args.arch, slots=args.slots)
-    for i in range(args.requests):
-        prompt = rng.integers(0, srv.cfg.vocab,
-                              rng.integers(4, 12)).astype(np.int32)
-        srv.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
-    stats = srv.run()
-    print(f"served {len(srv.completed)} requests, "
-          f"{stats['tokens']} tokens in {stats['steps']} steps, "
-          f"{stats['tok_per_s']:.1f} tok/s")
+def mixed_stream_bit_match(engine, n_rounds: int, seed: int) -> bool:
+    """Interleave queries with edge/feature updates; every query's
+    incremental logits must bit-match the cold full recompute."""
+    rng = np.random.default_rng(seed)
+    n = engine.graph.n_nodes
+    ok = True
+    for _ in range(n_rounds):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            ids = rng.integers(0, n, 2)
+            engine.update_features(
+                ids, rng.standard_normal(
+                    (2, engine.feat_dim)).astype(np.float32))
+        elif kind == 1:
+            engine.update_edges(add=[(int(rng.integers(0, n)),
+                                      int(rng.integers(0, n)))
+                                     for _ in range(2)])
+        else:
+            v = int(rng.integers(0, n))
+            nbrs = engine.graph.in_neighbors(v)
+            if len(nbrs):
+                engine.update_edges(remove=[(int(nbrs[0]), v)])
+        q = rng.integers(0, n, 4)
+        inc = engine.query(q)
+        cold = engine.query(q, use_cache=False)
+        ok = ok and bool((inc == cold).all())
+    return ok
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", default="coo+serial",
+                    help="serving Engine spec ('auto' uses the planner's "
+                    "serving mode)")
+    ap.add_argument("--train-spec", default="ell+pipelined",
+                    help="spec the checkpoint-producing Trainer runs")
+    ap.add_argument("--n-cores", type=int,
+                    default=int(os.environ.get("REPRO_SERVE_CORES", 4)))
+    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--feat-dim", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--train-steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore from here when it already holds a "
+                    "checkpoint; otherwise train into it")
+    ap.add_argument("--rate", type=float, default=150.0,
+                    help="open-loop arrivals per second")
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--slo-ms", type=float, default=50.0)
+    ap.add_argument("--cache-capacity", type=int, default=4096)
+    ap.add_argument("--feature-cache-capacity", type=int, default=0)
+    ap.add_argument("--update-rounds", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: assert bit-match + p99 budget")
+    # ~50x the warm p50: catches pathological regressions (e.g. a jit
+    # recompile per query is an ~800ms floor) without flaking on shared
+    # CI host load
+    ap.add_argument("--p99-budget-ms", type=float, default=400.0)
+    args = ap.parse_args(argv)
+
+    from repro.serving import InferenceService, poisson_trace
+
+    tmp = None
+    ckpt_dir = args.ckpt_dir
+    dataset = None
+    if ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_serve_ckpt_")
+        ckpt_dir = tmp.name
+    if not any(name.startswith("step_") for name in
+               (os.listdir(ckpt_dir) if os.path.isdir(ckpt_dir) else [])):
+        print(f"training {args.train_steps} steps "
+              f"({args.train_spec}, {args.n_cores} cores) -> {ckpt_dir}")
+        dataset = _train_checkpoint(args, ckpt_dir)
+
+    engine, dataset = build_engine(args, ckpt_dir, dataset)
+    print(f"serving spec: {engine.spec}  "
+          f"({engine.n_layers} layers, {engine.graph.n_nodes} nodes)")
+
+    bit_match = mixed_stream_bit_match(engine, args.update_rounds,
+                                       args.seed)
+    print(f"mixed query/update stream: incremental == cold recompute: "
+          f"{bit_match}")
+
+    trace = poisson_trace(args.rate, args.duration, engine.graph.n_nodes,
+                          seed=args.seed)
+    # rehearsal pass off the clock: replay the identical trace once so
+    # every jit shape bucket it will hit is compiled before measurement —
+    # compile is deployment warmup, not serving latency (one uncompiled
+    # bucket mid-replay shows up as a ~400ms p99 outlier)
+    InferenceService(engine, max_batch=args.max_batch,
+                     max_wait=args.max_wait_ms * 1e-3) \
+        .replay(trace, slo=args.slo_ms * 1e-3)
+    service = InferenceService(engine, max_batch=args.max_batch,
+                               max_wait=args.max_wait_ms * 1e-3)
+    out = service.replay(trace, slo=args.slo_ms * 1e-3)
+    hit_rate = engine.cache.hit_rate
+    print(f"open loop: {out['completed']} requests  "
+          f"p50 {out['p50_ms']:.1f}ms  p99 {out['p99_ms']:.1f}ms  "
+          f"throughput@SLO({out['slo_ms']:.0f}ms) "
+          f"{out['throughput_at_slo']:.1f}/s  "
+          f"coalesce {out['coalesce_factor']:.2f}x  "
+          f"embedding-cache hit-rate {hit_rate:.2f}")
+    if tmp is not None:
+        tmp.cleanup()
+    if args.smoke:
+        ok = bit_match and out["p99_ms"] < args.p99_budget_ms
+        print("SERVING SMOKE", "PASS" if ok else
+              f"FAIL (bit_match={bit_match}, p99={out['p99_ms']:.1f}ms, "
+              f"budget={args.p99_budget_ms}ms)")
+        raise SystemExit(0 if ok else 1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Online GCN inference service on the Engine.
+
+The serving subsystem: a deque-backed request queue + coalescer
+(:mod:`~repro.serving.queue`), a versioned historical-embedding cache with
+frontier-walk invalidation (:mod:`~repro.serving.cache`), a mutable serving
+graph (:mod:`~repro.serving.graph`), the :class:`InferenceEngine` that runs
+layered queries over any registered Engine spec with bit-exact incremental
+reuse (:mod:`~repro.serving.engine`), the single-worker
+:class:`InferenceService` loop (:mod:`~repro.serving.service`) and the
+open-loop load generator (:mod:`~repro.serving.loadgen`).
+"""
+from .cache import EmbeddingCache
+from .engine import InferenceEngine, load_checkpoint_params
+from .graph import DynamicGraph
+from .loadgen import Arrival, percentile, poisson_trace, summarize
+from .queue import InferenceRequest, MicroBatch, RequestQueue
+from .service import InferenceService
+
+__all__ = [
+    "EmbeddingCache", "InferenceEngine", "load_checkpoint_params",
+    "DynamicGraph", "Arrival", "percentile", "poisson_trace", "summarize",
+    "InferenceRequest", "MicroBatch", "RequestQueue", "InferenceService",
+]

@@ -1,0 +1,318 @@
+"""InferenceEngine — online GCN queries on any registered Engine spec.
+
+One engine owns: a trained weight stack (directly, or restored from a
+:class:`~repro.checkpoint.CheckpointManager` directory), a mutable
+:class:`~repro.serving.graph.DynamicGraph`, a feature source routed through
+the existing :mod:`repro.featurestore` surface (plain array, ``FeatureStore``
+or ``HotVertexCache`` — all share the counted ``gather`` front door), and a
+versioned :class:`~repro.serving.cache.EmbeddingCache` of historical
+hop-``l`` embeddings.
+
+``query(nodes)`` runs the L-layer GCN top-down: at each layer the engine
+splits the needed vertices into cache-valid rows (reused verbatim) and
+uncached rows (recursed), builds the rectangular per-layer COO in
+**canonical form** — rows sorted ascending, each row's columns ascending,
+row-mean ``1/|N_in(v) ∪ {v}|`` weights, shapes padded to power-of-two
+buckets — and runs it through ``Engine.layer``.  Canonical construction is
+what makes the incremental path *bit-equal* to a cold full recompute: for
+the ``coo`` and ``ell`` formats a row's output is a row-local reduction
+over its own edge segment, independent of which other rows share the
+micro-batch (verified property; the ``block`` format's cross-row tiling
+breaks it, so the cache auto-disables there and ``incremental_supported``
+reads false in :meth:`stats`).
+
+``update_edges`` / ``update_features`` mutate the graph/feature state and
+run the invalidation frontier walk: the directly dirtied vertices
+invalidate their layer-1 entries, one out-neighbor expansion per deeper
+layer invalidates exactly the rows whose aggregation transitively reads a
+changed input.  Everything else keeps serving from history (the cache's
+staleness counters record how far back).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Set, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import Engine, EngineConfig
+from repro.graph import CSRGraph, from_edges
+
+from .cache import EmbeddingCache
+from .graph import DynamicGraph
+
+
+def load_checkpoint_params(ckpt_dir: str) -> List[Dict[str, np.ndarray]]:
+    """Restore the newest Trainer checkpoint's GCN weight stack.
+
+    The Trainer saves ``params`` as ``[{"w": [d_in, d_out]}, ...]``; the
+    manifest's leaf paths (``"0/w"``, ``"1/w"``, …) carry enough structure
+    to rebuild the ``like`` tree without knowing the layer dims up front,
+    so serving needs only the directory.
+    """
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(ckpt_dir)
+    step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    layers: Dict[int, Dict[str, np.ndarray]] = {}
+    for key, meta in manifest["leaves"].items():
+        idx, _, name = key.partition("/")
+        layers.setdefault(int(idx), {})[name] = np.zeros(
+            meta["shape"], np.dtype(meta["dtype"]))
+    like = [layers[i] for i in sorted(layers)]
+    tree, _ = mgr.restore(step, like)
+    return tree
+
+
+def _bucket(n: int, multiple: int) -> int:
+    """Pad ``n`` up to a power-of-two bucket (≥ ``multiple``) — bounded
+    distinct shapes keep the per-shape layout/compile caches small."""
+    n = max(int(n), 1)
+    b = 1 << (n - 1).bit_length()
+    return max(b, multiple)
+
+
+class InferenceEngine:
+    """Online GCN inference over a trained checkpoint + mutable graph.
+
+    Parameters
+    ----------
+    engine: spec string (``"coo+serial"``, ``"auto"``, …),
+        :class:`EngineConfig` or :class:`Engine`.  ``"auto"`` resolves
+        through the planner's SERVING mode (latency-weighted over
+        micro-batch sizes ``1..max_batch``, see
+        :func:`repro.engine.planner.rank_specs`).
+    graph: :class:`~repro.graph.CSRGraph` or
+        :class:`~repro.serving.graph.DynamicGraph` — the base adjacency.
+    features: ``[n, d]`` array, ``FeatureStore`` or ``HotVertexCache``.
+    params: the weight stack (``[{"w": ...}, ...]``), or ``None`` with
+        ``ckpt_dir`` to restore the newest checkpoint.
+    cache_capacity: embedding-cache rows (0 disables incremental reuse).
+    feature_cache_capacity: if > 0 and ``features`` is a bare store, wrap
+        it in a degree-keyed :class:`~repro.featurestore.HotVertexCache`.
+    pad_multiple: minimum shape bucket for the per-query COO padding.
+    max_batch: the coalescer bound the serving-mode planner ranks for.
+    """
+
+    def __init__(self, engine: Union[str, EngineConfig, Engine],
+                 graph: Union[CSRGraph, DynamicGraph], features, *,
+                 params: Optional[List[Dict]] = None,
+                 ckpt_dir: Optional[str] = None,
+                 cache_capacity: int = 4096,
+                 feature_cache_capacity: int = 0,
+                 pad_multiple: int = 8, max_batch: int = 8):
+        if not isinstance(engine, Engine):
+            engine = Engine(engine)
+        if engine.is_auto:
+            from repro.engine import planner
+            spec = planner.resolve_spec(n_cores=1, mode="serving",
+                                        max_batch=max_batch)
+            engine = Engine(engine.config.with_spec(spec))
+        self.engine = engine
+        self.spec = engine.spec
+        self.graph = graph if isinstance(graph, DynamicGraph) \
+            else DynamicGraph(graph)
+        if params is None:
+            if ckpt_dir is None:
+                raise ValueError("pass params or ckpt_dir")
+            params = load_checkpoint_params(ckpt_dir)
+        self.params = params
+        self.weights = [jnp.asarray(np.asarray(p["w"], np.float32))
+                        for p in params]
+        self.n_layers = len(self.weights)
+        self.feat_dim = int(self.weights[0].shape[0])
+        self.n_classes = int(self.weights[-1].shape[1])
+        if feature_cache_capacity > 0 and hasattr(features, "gather") \
+                and not hasattr(features, "store"):
+            from repro.featurestore import HotVertexCache
+            degrees = np.fromiter(
+                (self.graph.in_degree(v)
+                 for v in range(self.graph.n_nodes)),
+                np.int64, self.graph.n_nodes)
+            features = HotVertexCache(features, degrees,
+                                      feature_cache_capacity)
+        self.features = features
+        self._overlay: Dict[int, np.ndarray] = {}
+        # the block format's cross-row tiling is not per-row
+        # bit-deterministic across batch compositions — incremental reuse
+        # would drift from the cold path by reduction-order ULPs, so the
+        # cache hard-disables rather than serve almost-right logits
+        self.incremental_supported = (engine.config.format != "block"
+                                      and cache_capacity > 0
+                                      and self.n_layers > 1)
+        self.cache = EmbeddingCache(max(cache_capacity, 1))
+        self.pad_multiple = int(pad_multiple)
+        self.max_batch = int(max_batch)
+        self.queries = 0
+        self.rows_computed = 0
+        self.rows_from_cache = 0
+        self.feature_updates = 0
+        self.edge_updates = 0
+
+    # -- feature plane --------------------------------------------------------
+    def _gather_features(self, nodes: np.ndarray) -> np.ndarray:
+        """Layer-0 rows: overlay (serving-time updates) over the sealed
+        store/cache/array — overlay rows are verbatim, so updated features
+        are bit-exact on both the incremental and cold paths."""
+        if hasattr(self.features, "gather"):
+            rows = np.asarray(self.features.gather(nodes), np.float32)
+        else:
+            rows = np.asarray(self.features, np.float32)[nodes]
+        if self._overlay:
+            for i, v in enumerate(nodes):
+                ov = self._overlay.get(int(v))
+                if ov is not None:
+                    rows[i] = ov
+        return rows
+
+    # -- the layered recursion ------------------------------------------------
+    def _embed(self, layer: int, nodes: np.ndarray,
+               use_cache: bool) -> np.ndarray:
+        """Embeddings of sorted-unique ``nodes`` after ``layer`` GCN
+        layers (``layer=0`` → raw features)."""
+        if layer == 0:
+            return self._gather_features(nodes)
+        d_out = int(self.weights[layer - 1].shape[1])
+        out = np.empty((len(nodes), d_out), np.float32)
+        todo: List[int] = []
+        cacheable = use_cache and layer < self.n_layers
+        if cacheable:
+            for i, v in enumerate(nodes):
+                row = self.cache.get(layer, int(v))
+                if row is None:
+                    todo.append(i)
+                else:
+                    out[i] = row
+            self.rows_from_cache += len(nodes) - len(todo)
+        else:
+            todo = list(range(len(nodes)))
+        if todo:
+            tnodes = nodes[todo]          # sorted: todo is ascending
+            fresh = self._compute_rows(layer, tnodes, use_cache)
+            out[todo] = fresh
+            self.rows_computed += len(todo)
+            if cacheable:
+                for v, row in zip(tnodes, fresh):
+                    self.cache.put(layer, int(v), row)
+        return out
+
+    def _compute_rows(self, layer: int, tnodes: np.ndarray,
+                      use_cache: bool) -> np.ndarray:
+        """One canonical rectangular layer: rows = ``tnodes`` (sorted),
+        cols = their joint 1-hop frontier (sorted), mean weights, and
+        EVERY array dimension — rows, cols, and the edge count — padded to
+        a power-of-two bucket.  The nnz padding matters as much as the
+        shape padding: each distinct traced shape is one XLA compile, and
+        online frontiers vary per query, so an unpadded edge count would
+        recompile (hundreds of ms) on nearly every request.  Pad edges are
+        zero-weight and live entirely in the padding row/column (buckets
+        are sized on ``len + 1`` so the last row/col is never real),
+        leaving every real row's reduction untouched."""
+        agg = [self.graph.agg_set(int(v)) for v in tnodes]
+        frontier = np.unique(np.concatenate(agg)) if agg \
+            else np.empty(0, np.int64)
+        h_in = self._embed(layer - 1, frontier, use_cache)
+        n_dst = _bucket(len(tnodes) + 1, self.pad_multiple)
+        n_src = _bucket(len(frontier) + 1, self.pad_multiple)
+        nnz = sum(len(a) for a in agg)
+        nnz_pad = _bucket(nnz, self.pad_multiple)
+        rows = np.full(nnz_pad, n_dst - 1, np.int64)
+        cols = np.full(nnz_pad, n_src - 1, np.int64)
+        vals = np.zeros(nnz_pad, np.float32)
+        k = 0
+        for r, a in enumerate(agg):
+            m = len(a)
+            rows[k:k + m] = r
+            cols[k:k + m] = np.searchsorted(frontier, a)
+            vals[k:k + m] = 1.0 / m
+            k += m
+        coo = from_edges(rows, cols, vals, n_dst, n_src)
+        x = np.zeros((n_src, h_in.shape[1]), np.float32)
+        x[:len(frontier)] = h_in
+        y = self.engine.layer(coo, jnp.asarray(x), self.weights[layer - 1],
+                              activate=layer < self.n_layers)
+        return np.asarray(y)[:len(tnodes)]
+
+    # -- queries --------------------------------------------------------------
+    def query(self, nodes: Sequence[int], *, use_cache: bool = True
+              ) -> np.ndarray:
+        """Logits ``[len(nodes), n_classes]`` in the given order
+        (duplicates fine — they share one computed row).
+
+        ``use_cache=False`` is the cold full recompute: the identical
+        recursion with the cache bypassed, bit-equal to the incremental
+        path by per-row determinism of the canonical layer construction.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        self.queries += 1
+        uniq, inv = np.unique(nodes, return_inverse=True)
+        logits = self._embed(self.n_layers, uniq,
+                             use_cache and self.incremental_supported)
+        return logits[inv]
+
+    # -- updates + the invalidation frontier walk -----------------------------
+    def _invalidate_from(self, level1: Set[int]) -> None:
+        """Drop ``(l, v)`` for every ``v`` in frontier level ``l``, where
+        level 1 is the directly-dirtied rows and each deeper level is one
+        out-neighbor expansion (the rows whose aggregation transitively
+        reads a changed embedding)."""
+        frontier = level1
+        for layer in range(1, self.n_layers):
+            self.cache.invalidate(layer, frontier)
+            if layer + 1 < self.n_layers:
+                frontier = self.graph.expand_out(frontier)
+        self.cache.bump_version()
+
+    def update_edges(self, add: Sequence = (), remove: Sequence = ()
+                     ) -> Dict[str, int]:
+        """Apply edge additions/removals; invalidate the affected cache
+        frontier.  A dst row's layer-1 embedding changes with its in-list
+        (mean weights are row-local), so level 1 is exactly the dirty dst
+        set."""
+        dirty = self.graph.update_edges(add=add, remove=remove)
+        self.edge_updates += 1
+        if dirty:
+            self._invalidate_from(dirty)
+        return {"dirty_rows": len(dirty),
+                "cache_version": self.cache.version}
+
+    def update_features(self, nodes: Sequence[int], rows) -> Dict[str, int]:
+        """Overwrite feature rows (overlay over the sealed store); a
+        feature change at ``u`` reaches layer 1 of ``u`` and every row
+        aggregating ``u``, so level 1 is ``{u} ∪ out(u)``."""
+        nodes = np.asarray(nodes, np.int64)
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.shape != (len(nodes), self.feat_dim):
+            raise ValueError(f"rows shape {rows.shape} != "
+                             f"({len(nodes)}, {self.feat_dim})")
+        for v, row in zip(nodes, rows):
+            self._overlay[int(v)] = row.copy()
+        self.feature_updates += 1
+        self._invalidate_from(self.graph.expand_out(nodes))
+        return {"dirty_rows": len(nodes),
+                "cache_version": self.cache.version}
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        s = {"spec": self.spec, "n_layers": self.n_layers,
+             "queries": self.queries,
+             "rows_computed": self.rows_computed,
+             "rows_from_cache": self.rows_from_cache,
+             "feature_updates": self.feature_updates,
+             "edge_updates": self.edge_updates,
+             "overlay_rows": len(self._overlay),
+             "incremental_supported": self.incremental_supported,
+             "cache": self.cache.stats()}
+        fs = getattr(self.features, "stats", None)
+        if callable(fs):
+            s["feature_cache"] = fs()
+        return s

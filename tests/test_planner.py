@@ -268,6 +268,101 @@ def test_graph_stats_bucketing():
 
 
 # ---------------------------------------------------------------------------
+# Serving mode: latency-weighted ranking over micro-batch sizes.
+# ---------------------------------------------------------------------------
+def test_serving_mode_scores_are_latency_weighted():
+    """The serving objective is pinned: mean predicted latency over
+    coalesced micro-batch sizes 1, 2, 4, … max_batch (each micro-batch is
+    one user-visible latency, so every size weighs equally)."""
+    from repro.engine import get_topology, planner
+
+    model = planner.CostModel(alpha=1e-4, beta=1e-9, const=1e-3, n_cores=4)
+    cands = ["ell+pipelined+hypercube", "ell+pipelined+ring"]
+    ranked = dict(planner.rank_specs(model, 4, candidates=cands,
+                                     mode="serving", max_batch=8))
+    for spec in cands:
+        topo = get_topology(spec.split("+")[2])
+        plans = [topo.plan(b, model.d, 4) for b in (1, 2, 4, 8)]
+        want = sum(model.predict(p) for p in plans) / len(plans)
+        assert ranked[spec] == pytest.approx(want)
+    # max_batch=1 degenerates to the single-request latency
+    one = dict(planner.rank_specs(model, 4, candidates=cands,
+                                  mode="serving", max_batch=1))
+    for spec in cands:
+        topo = get_topology(spec.split("+")[2])
+        assert one[spec] == pytest.approx(
+            model.predict(topo.plan(1, model.d, 4)))
+    # train mode scores the fitted workload's row count instead
+    train = dict(planner.rank_specs(model, 4, candidates=cands))
+    for spec in cands:
+        topo = get_topology(spec.split("+")[2])
+        assert train[spec] == pytest.approx(
+            model.predict(topo.plan(model.n_rows, model.d, 4)))
+    with pytest.raises(ValueError, match="rank mode"):
+        planner.rank_specs(model, 4, mode="batch")
+
+
+def test_serving_and_train_rankings_can_invert(monkeypatch):
+    """The point of the serving mode: a topology that wins on wire bytes
+    at training row counts loses at micro-batch sizes if it takes more
+    hops.  The built-in topologies all ship the bandwidth-optimal byte
+    count (torus2d dominates outright), so the inversion is demonstrated
+    on a synthetic few-hop/fat-message topology — the shape a new
+    registration could legally have."""
+    from repro.engine import planner, registry
+    from repro.topology.base import Topology
+
+    class FatPipe(Topology):
+        """One hop, but 6× the wire bytes (redundant wide messages)."""
+
+        def steps(self, n_cores):
+            return 1
+
+        def bytes_per_core(self, n_rows, d, n_cores, dtype_bytes=4):
+            return 6 * super().bytes_per_core(n_rows, d, n_cores,
+                                              dtype_bytes)
+
+    inst = FatPipe()
+    inst.name = "fatpipe"
+    registry._ensure_topologies()
+    monkeypatch.setitem(registry._TOPOLOGIES, "fatpipe", inst)
+    model = planner.CostModel(alpha=1e-4, beta=1e-9, const=1e-3, n_cores=4)
+    cands = ["ell+pipelined+hypercube", "ell+pipelined+fatpipe"]
+    train = planner.rank_specs(model, 4, candidates=cands)
+    serving = planner.rank_specs(model, 4, candidates=cands,
+                                 mode="serving", max_batch=8)
+    # train (512 rows): β·bytes dominates → the lean 2-hop hypercube wins
+    assert train[0][0] == "ell+pipelined+hypercube"
+    # serving (1..8 rows): bytes are negligible, α·steps dominates → the
+    # 1-hop fat pipe wins despite shipping 6× the bytes
+    assert serving[0][0] == "ell+pipelined+fatpipe"
+
+
+def test_serving_mode_skips_persisted_train_winner(tmp_path):
+    """Tier 1 records measure training step THROUGHPUT — the wrong
+    objective for micro-batch latency — so ``mode="serving"`` must skip
+    them and rank through the cost model."""
+    from repro.engine import planner
+
+    key = planner._entry_key("cpu", 4, "default")
+    _write(tmp_path / "planner.json",
+           {"entries": {key: {"spec": "block+pipelined+ring"}}})
+    _write(tmp_path / "topology.json",
+           _topology_record(n_cores=4, alpha=1e-6, beta=1e-7, const=1e-4))
+    # train mode: the persisted winner beats everything …
+    assert planner.resolve_spec(n_cores=4,
+                                backend="cpu") == "block+pipelined+ring"
+    # … serving mode ignores it and takes the analytic tier's pick (the
+    # byte-dominated planted model favors torus2d's orthogonal halves)
+    got = planner.resolve_spec(n_cores=4, backend="cpu", mode="serving")
+    assert got == "ell+pipelined+torus2d"
+    # no topology record either → the static fallback, never the tier-1 hit
+    (tmp_path / "topology.json").unlink()
+    got = planner.resolve_spec(n_cores=4, backend="cpu", mode="serving")
+    assert got == planner.DEFAULT_SPEC
+
+
+# ---------------------------------------------------------------------------
 # Engine("auto") end-to-end on simulated devices.
 # ---------------------------------------------------------------------------
 def test_auto_resolves_and_trains_on_2_and_4_devices():

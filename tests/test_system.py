@@ -92,7 +92,7 @@ def test_trainer_resume_matches_uninterrupted(tmp_path):
 
 
 def test_serve_completes_all_requests():
-    from repro.launch.serve import Request, Server
+    from repro.launch.lm_serve import Request, Server
     rng = np.random.default_rng(0)
     srv = Server("llama3.2-1b", slots=3, max_seq=64)
     for i in range(5):
